@@ -1,0 +1,47 @@
+"""Paper Fig. 11 — speedup of each Exchange/LoopFusion variant vs the
+original GKV loop (directive on iz), all at the paper's 32-thread degree.
+
+Paper result (FX100): directive-on-outermost is fastest at 1.791×.
+This host is a 1-core CPU, so the *structure* effects (grain count, vector
+shapes) are measured, not 32-way parallel speedup — relative ordering is the
+reproduction target, absolute ratios are machine-specific.
+"""
+from __future__ import annotations
+
+from .common import FAST, emit, time_call
+
+import jax
+
+from repro.apps import gkv
+from repro.core import ExchangeVariant, GKV_FIGURE_OF_VARIANT, enumerate_exchange_variants
+
+DEGREE = 32
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(0)
+    dims = gkv.GKV_DIMS if not FAST else (("iv", 8), ("iz", 8), ("mx", 32), ("my", 17))
+    inp = gkv.make_inputs(key, dims)
+    nest = gkv.exb_nest(dims)
+
+    results = {}
+    original_time = None
+    for v in enumerate_exchange_variants(4):
+        fig = GKV_FIGURE_OF_VARIANT[(v.m, v.j)]
+        fn = jax.jit(nest.variant_fn(v, DEGREE))
+        t = time_call(fn, inp, warmup=1, repeats=2 if FAST else 3)
+        results[fig] = t
+        if (v.m, v.j) == (4, 2):
+            original_time = t
+    for fig, t in results.items():
+        emit(f"fig11/{fig}", t, f"speedup_vs_original={original_time / t:.3f}")
+    best = min(results, key=results.get)
+    emit(
+        "fig11/best", results[best],
+        f"variant={best};speedup={original_time / results[best]:.3f}",
+    )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Roofline table (§Roofline deliverable) — reads the dry-run sweep results
+(results/dryrun_baseline.jsonl, produced by ``python -m repro.launch.dryrun
+--all --both-meshes``) and prints the per-cell three-term table as CSV.
+
+Not a wall-clock benchmark: the three terms are compiled-artifact analysis
+for the TPU v5e target (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_baseline.jsonl")
+
+
+def run(path: str = BASELINE) -> list:
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"run dryrun --all first ({path})")
+        return []
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    from repro.configs import SHAPES, get_config
+    from repro.models import analytic_step_flops
+
+    for r in ok:
+        t = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        # recompute MODEL_FLOPS with the attention/scan-aware formula (rows
+        # may predate it)
+        cell = SHAPES[r["shape"]]
+        r["model_flops"] = analytic_step_flops(
+            get_config(r["arch"]), cell.kind, cell.global_batch, cell.seq_len
+        )
+        r["useful_flops_ratio"] = (
+            r["model_flops"] / t["hlo_flops"] if t["hlo_flops"] else 0.0
+        )
+        frac = r.get("useful_flops_ratio") or 0.0
+        # roofline fraction: ideal model-FLOPs time / achieved bound
+        ideal = r["model_flops"] / (r["chips"] * 197e12)
+        achieved = t["total_s"]
+        emit(
+            name,
+            achieved,
+            f"bottleneck={t['bottleneck']};C={t['compute_s']:.3e};"
+            f"M={t['memory_s']:.3e};X={t['collective_s']:.3e};"
+            f"useful_ratio={frac:.3f};roofline_frac={ideal / achieved:.4f};"
+            f"mem_per_dev_GiB={r['memory']['per_device_total'] / 2**30:.2f}",
+        )
+    emit("roofline/cells_ok", 0.0, f"count={len(ok)}/{len(rows)}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

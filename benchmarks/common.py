@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+
+def time_call(fn, *args, warmup=1, repeats=3):
+    """Best-of wall time in seconds (paper methodology: many iterations,
+    report the stable time; min suppresses scheduler noise)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

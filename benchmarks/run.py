@@ -1,0 +1,36 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run   # reduced domains
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (
+        bench_fig11_loop_exchange,
+        bench_fig12_degree_switch,
+        bench_fig13_14_combined,
+        bench_roofline,
+    )
+
+    for mod in (
+        bench_fig11_loop_exchange,
+        bench_fig12_degree_switch,
+        bench_fig13_14_combined,
+        bench_roofline,
+    ):
+        try:
+            mod.run()
+        except Exception as e:  # a failing table must not hide the others
+            print(f"{mod.__name__},0.0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper reproduction driver: the full §III–§V GKV experiment.
+
+    PYTHONPATH=src python examples/autotune_gkv.py [--fast]
+
+Runs the joint (10 loop variants × thread degrees) before-execution AT on
+the GKV exb_realspcal kernel at the paper's exact domain (iv=16, iz=16,
+mx=128, my=65), prints the Fig-11/13/14 tables, and compares against the
+paper's FX100 findings.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.apps import gkv
+from repro.core import (
+    BasicParams,
+    GKV_FIGURE_OF_VARIANT,
+    Tuner,
+    TuningDB,
+    WallClockCost,
+    enumerate_exchange_variants,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--db", default="results/gkv_tuning.json")
+    args = ap.parse_args()
+
+    dims = (
+        (("iv", 8), ("iz", 8), ("mx", 32), ("my", 17)) if args.fast else gkv.GKV_DIMS
+    )
+    degrees = (1, 32) if args.fast else (1, 2, 4, 8, 16, 32)
+    inp = gkv.make_inputs(jax.random.PRNGKey(0), dims)
+    region = gkv.exb_region(dims, degrees=degrees)
+
+    print(f"domain {dict(dims)}, {region.space.size()} candidates")
+    cost = WallClockCost(
+        build=lambda p: (lambda f=jax.jit(region.instantiate(p)): f(inp)),
+        warmup=1, repeats=3,
+    )
+    bp = BasicParams.make(arch="gkv_exb", dims=tuple(dims), degrees=degrees)
+    result = Tuner(TuningDB(args.db)).tune(region, bp, cost)
+
+    costs = {(tuple(t.point["variant"]), t.point["degree"]): t.cost
+             for t in result.trials}
+    t_orig = costs[((4, 2), max(degrees))]
+
+    print(f"\n{'variant':34s}{'best ms':>9s}{'(deg)':>6s}{'vs orig':>9s}{'deg gain':>9s}")
+    for v in enumerate_exchange_variants(4):
+        fig = GKV_FIGURE_OF_VARIANT[(v.m, v.j)]
+        per_d = {d: costs[((v.m, v.j), d)] for d in degrees}
+        bd = min(per_d, key=per_d.get)
+        print(
+            f"{fig:34s}{per_d[bd] * 1e3:9.2f}{bd:6d}"
+            f"{t_orig / per_d[bd]:9.3f}{per_d[max(degrees)] / per_d[bd]:9.3f}"
+        )
+    print(
+        f"\ncombined best: {result.best.point} -> "
+        f"{t_orig / result.best.cost:.3f}x vs original (paper FX100: 1.801x)"
+    )
+    print(f"evaluations: {result.evaluations}; tuning DB: {args.db}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving example: prefill + greedy decode with KV/state caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+
+Serves a batch of synthetic requests through the production Server (AOT
+prefill/decode executables, per-family cache: KV ring buffers for the hybrid
+arch, O(1) SSM state for falcon-mamba).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import synthetic_requests
+from repro.models import init_params, param_specs
+from repro.runtime import Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list(ARCH_IDS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--batch-size", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
+    server = Server(cfg, params, batch_size=args.batch_size)
+
+    reqs = synthetic_requests(
+        cfg, n=args.requests, prompt_len=args.prompt_len,
+        max_new_tokens=args.new_tokens,
+    )
+    out = server.run(reqs)
+    for rid in sorted(out):
+        toks = out[rid]
+        print(f"req {rid}: {len(toks)} tokens -> {toks[:12]}{'...' if len(toks) > 12 else ''}")
+    s = server.stats
+    print(
+        f"\nprefill {s.prefill_s * 1e3:.1f} ms total; decode {s.decode_s * 1e3:.1f} ms; "
+        f"{s.decode_tok_per_s:.1f} tok/s (CPU host, reduced config)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md tables from results/*.jsonl.
+
+    PYTHONPATH=src python scripts/gen_experiments_tables.py > results/tables.md
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config, skipped_cells
+from repro.models import analytic_step_flops
+
+PEAK = 197e12
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def enrich(r):
+    cell = SHAPES[r["shape"]]
+    mf = analytic_step_flops(get_config(r["arch"]), cell.kind, cell.global_batch, cell.seq_len)
+    r["model_flops"] = mf
+    t = r["roofline"]
+    r["useful_flops_ratio"] = mf / t["hlo_flops"] if t["hlo_flops"] else 0.0
+    r["roofline_frac"] = (mf / (r["chips"] * PEAK)) / t["total_s"] if t["total_s"] else 0.0
+    return r
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    mem = r["memory"]["per_device_total"] / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {mem:.1f} | "
+        f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+        f"{t['bottleneck']} | {r['useful_flops_ratio']:.3f} | {r['roofline_frac']:.4f} |"
+    )
+
+
+def main():
+    base = [enrich(r) for r in load("results/dryrun_baseline.jsonl") if r.get("status") == "ok"]
+    print("### §Roofline — baseline table (rule=tp, remat=full, n_micro=1)\n")
+    print("| arch | shape | mesh | mem/dev GiB | compute s | memory s | collective s | bottleneck | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in base:
+        print(fmt_row(r))
+    print()
+    print("Skipped by assignment rule:")
+    for arch, shape, reason in skipped_cells():
+        print(f"- {arch} × {shape}: {reason}")
+    print()
+
+    hc = [r for r in load("results/hillclimb.jsonl") if r.get("status") == "ok"]
+    if hc:
+        print("### §Perf — hillclimb iteration log\n")
+        print("| cell/step | rule | n_micro | mem/dev GiB | compute s | memory s | collective s | bottleneck | useful | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in hc:
+            r = enrich(r)
+            t = r["roofline"]
+            mem = r["memory"]["per_device_total"] / 2**30
+            print(
+                f"| {r.get('label','?')} | {r['rule']} | {r.get('n_micro',1)} | {mem:.1f} | "
+                f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+                f"{t['bottleneck']} | {r['useful_flops_ratio']:.3f} | {r['roofline_frac']:.4f} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""The paper's two target applications, rebuilt in JAX.
+
+* :mod:`repro.apps.gkv` — GKV plasma-turbulence ``exb_realspcal`` quadruple
+  loop (paper §III/§V target; Watanabe & Sugama 2006).
+* :mod:`repro.apps.seism3d` — ppOpen-APPL/FDM / Seism3D ``update_stress``
+  (paper §IV target; Mori, Matsumoto & Furumura 2015).
+"""
+from . import gkv, seism3d
+
+__all__ = ["gkv", "seism3d"]

@@ -1,0 +1,127 @@
+"""GKV ``exb_realspcal`` — the paper's §III/§V tuning target, in JAX.
+
+The Fortran original (paper Fig. 1) updates the E×B drift term of the
+gyrokinetic Vlasov distribution in real space::
+
+    do iv = 1, 2*nv
+    !$OMP parallel do private(mx, my)
+      do iz = -nz, nz-1
+        do mx = ist_xw, iend_xw
+          do my = 0, nyw
+            wkdf1_xw(my,mx,iz,iv) = cmplx(
+               real (wkdf1)*real (wkeyw - cs1*vl(iv)*wkbyw)
+             - real (wkdf2)*real (wkexw - cs1*vl(iv)*wkbxw),
+               aimag(wkdf1)*aimag(wkeyw - cs1*vl(iv)*wkbyw)
+             - aimag(wkdf2)*aimag(wkexw - cs1*vl(iv)*wkbxw)) * cef
+
+The curious real/imag-split product exists because GKV packs two real-space
+fields into one complex array after a real-to-complex FFT; the component-wise
+product is two independent real multiplies, NOT a complex multiply.  We keep
+that exactly (it is what makes the kernel memory-light and vector-friendly —
+2 real FMAs per component).
+
+Index domain (paper §III.C, FX100 run):
+    iv: 16,  iz: 16,  mx: 128,  my: 65   (Fortran array order is reversed;
+    we store C-order ``(iv, iz, mx, my)``).
+
+Fields:
+    wkdf1_xw, wkdf2_xw              complex64 over (iv, iz, mx, my)
+    wkexw_xw, wkeyw_xw,
+    wkbxw_xw, wkbyw_xw              complex64 over (iz, mx, my)
+    vl                              float32 over (iv,)
+    cs1, cef                        real scalars
+
+The loop nest is bracketed as an AT region over the paper's 10 Exchange ×
+LoopFusion variants and the degree domain {1,...,32} — §V's joint space.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ATRegion, LoopNest
+
+# Paper §III.C experimental domain.
+GKV_DIMS: Tuple[Tuple[str, int], ...] = (
+    ("iv", 16),
+    ("iz", 16),
+    ("mx", 128),
+    ("my", 65),
+)
+
+CS1 = 0.8775825618903728  # cos(0.5); any O(1) physics constant works
+CEF = 1.0 / (2 * 128 * 2 * 64)  # 1/(2nx * 2ny) FFT back-normalization
+
+
+def exb_body(inp: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """The calculation kernel, shape-polymorphic and elementwise.
+
+    All leaves of ``inp`` share one (block) shape; ``vl`` etc. are already
+    broadcast by :func:`make_inputs`.  Returns the updated ``wkdf1_xw``.
+    """
+    ey = inp["wkeyw"] - CS1 * inp["vl"] * inp["wkbyw"]
+    ex = inp["wkexw"] - CS1 * inp["vl"] * inp["wkbxw"]
+    re = inp["wkdf1"].real * ey.real - inp["wkdf2"].real * ex.real
+    im = inp["wkdf1"].imag * ey.imag - inp["wkdf2"].imag * ex.imag
+    return {"wkdf1": jax.lax.complex(re, im) * CEF}
+
+
+def make_inputs(
+    key: jax.Array, dims: Sequence[Tuple[str, int]] = GKV_DIMS
+) -> Dict[str, jnp.ndarray]:
+    """Random physical fields, pre-broadcast to the full (iv,iz,mx,my) domain.
+
+    Broadcasting happens once, outside any timed region — mirroring that the
+    Fortran code streams the rank-3 fields once per iv iteration anyway.
+    """
+    shape = tuple(n for _, n in dims)
+    iv, iz, mx, my = shape
+    ks = jax.random.split(key, 13)
+
+    def cplx(k1, k2, s):
+        return jax.lax.complex(
+            jax.random.normal(k1, s, jnp.float32), jax.random.normal(k2, s, jnp.float32)
+        )
+
+    f3 = (iz, mx, my)
+    out = {
+        "wkdf1": cplx(ks[0], ks[1], shape),
+        "wkdf2": cplx(ks[2], ks[3], shape),
+        "wkexw": jnp.broadcast_to(cplx(ks[4], ks[5], f3), shape),
+        "wkeyw": jnp.broadcast_to(cplx(ks[6], ks[7], f3), shape),
+        "wkbxw": jnp.broadcast_to(cplx(ks[8], ks[9], f3), shape),
+        "wkbyw": jnp.broadcast_to(cplx(ks[10], ks[11], f3), shape),
+        "vl": jnp.broadcast_to(
+            jax.random.normal(ks[12], (iv, 1, 1, 1), jnp.float32), shape
+        ),
+    }
+    # Materialize broadcasts so every candidate sees identical concrete inputs.
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def exb_nest(dims: Sequence[Tuple[str, int]] = GKV_DIMS) -> LoopNest:
+    return LoopNest("gkv_exb_realspcal", dims, exb_body)
+
+
+def exb_region(
+    dims: Sequence[Tuple[str, int]] = GKV_DIMS,
+    degrees: Sequence[int] = (1, 2, 4, 8, 16, 32),
+) -> ATRegion:
+    """The paper's AT region: 10 loop variants × thread degrees (§V)."""
+    return exb_nest(dims).at_region(degrees=degrees)
+
+
+def reference(inputs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Pure-jnp oracle on the whole domain."""
+    return exb_body(inputs)
+
+
+def flops_per_point() -> int:
+    """Real FLOPs per domain point (for roofline napkin math).
+
+    ey/ex: 2 complex scale+sub = 2*(2 mul + 2 sub) = 8 each -> 16
+    re/im: 2 mul + 1 sub each -> 6;  final scale: 2.  Total 24.
+    """
+    return 24

@@ -1,0 +1,92 @@
+"""Seism3D / ppOpen-APPL/FDM ``update_stress`` — the paper's §IV target.
+
+``update_stress`` advances the six stress components of the 3-D
+velocity–stress staggered-grid FDM by one time step, given the nine velocity
+derivative fields (computed by the companion ``update_vel``-side difference
+routines, which ppOpen-APPL/FDM keeps separate).  Per grid point::
+
+    RL    = lam(i,j,k)            ! Lamé lambda
+    RM    = rig(i,j,k)            ! rigidity mu
+    RM2   = 2*RM
+    RLRM2 = RL + RM2
+    D3    = dxVx + dyVy + dzVz
+    Sxx  += dt * (RLRM2*D3 - RM2*(dyVy + dzVz))
+    Syy  += dt * (RLRM2*D3 - RM2*(dxVx + dzVz))
+    Szz  += dt * (RLRM2*D3 - RM2*(dxVx + dyVy))
+    Sxy  += dt * RM * (dxVy + dyVx)
+    Sxz  += dt * RM * (dxVz + dzVx)
+    Syz  += dt * RM * (dyVz + dzVy)
+
+This routine is 35 % of Seism3D's total run time (paper §IV.B) and is
+elementwise in the derivative arrays, so it brackets directly as a 3-deep
+(k, j, i) AT LoopNest.  The paper tunes only the thread count for it; we
+expose the full (variant × degree) space and use it for the Fig-12
+degree-switch-overhead experiment.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ATRegion, LoopNest
+
+# A NUMA-node-scale grid; the FX100 experiment ran 8 MPI ranks x 8 nodes.
+SEISM_DIMS: Tuple[Tuple[str, int], ...] = (("k", 64), ("j", 64), ("i", 64))
+
+DT = 5.0e-3
+
+_DERIVS = ("dxVx", "dyVy", "dzVz", "dxVy", "dyVx", "dxVz", "dzVx", "dyVz", "dzVy")
+_STRESS = ("Sxx", "Syy", "Szz", "Sxy", "Sxz", "Syz")
+
+
+def update_stress_body(inp: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    rl = inp["lam"]
+    rm = inp["rig"]
+    rm2 = 2.0 * rm
+    rlrm2 = rl + rm2
+    d3 = inp["dxVx"] + inp["dyVy"] + inp["dzVz"]
+    return {
+        "Sxx": inp["Sxx"] + DT * (rlrm2 * d3 - rm2 * (inp["dyVy"] + inp["dzVz"])),
+        "Syy": inp["Syy"] + DT * (rlrm2 * d3 - rm2 * (inp["dxVx"] + inp["dzVz"])),
+        "Szz": inp["Szz"] + DT * (rlrm2 * d3 - rm2 * (inp["dxVx"] + inp["dyVy"])),
+        "Sxy": inp["Sxy"] + DT * rm * (inp["dxVy"] + inp["dyVx"]),
+        "Sxz": inp["Sxz"] + DT * rm * (inp["dxVz"] + inp["dzVx"]),
+        "Syz": inp["Syz"] + DT * rm * (inp["dyVz"] + inp["dzVy"]),
+    }
+
+
+def make_inputs(
+    key: jax.Array, dims: Sequence[Tuple[str, int]] = SEISM_DIMS
+) -> Dict[str, jnp.ndarray]:
+    shape = tuple(n for _, n in dims)
+    names = list(_STRESS) + list(_DERIVS) + ["lam", "rig"]
+    ks = jax.random.split(key, len(names))
+    out = {}
+    for name, k in zip(names, ks):
+        x = jax.random.normal(k, shape, jnp.float32)
+        if name in ("lam", "rig"):
+            x = 1.0 + jnp.abs(x)  # physical: positive moduli
+        out[name] = x
+    return out
+
+
+def stress_nest(dims: Sequence[Tuple[str, int]] = SEISM_DIMS) -> LoopNest:
+    return LoopNest("seism3d_update_stress", dims, update_stress_body)
+
+
+def stress_region(
+    dims: Sequence[Tuple[str, int]] = SEISM_DIMS,
+    degrees: Sequence[int] = (1, 2, 4, 8, 16, 32),
+) -> ATRegion:
+    return stress_nest(dims).at_region(degrees=degrees)
+
+
+def reference(inputs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return update_stress_body(inputs)
+
+
+def flops_per_point() -> int:
+    """1 (rm2) + 1 (rlrm2) + 2 (d3) + 3*(2+1+1+1) + 3*(1+1+1) = 28."""
+    return 28

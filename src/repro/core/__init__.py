@@ -1,0 +1,78 @@
+"""repro.core — the paper's contribution: FIBER-layered autotuning for JAX.
+
+Public API:
+
+* :class:`~repro.core.params.BasicParams` / :class:`~repro.core.params.ParamSpace`
+  / :class:`~repro.core.params.PerfParam` — FIBER BP/PP vocabulary.
+* :class:`~repro.core.region.ATRegion` — the ``region start/end`` bracket.
+* :class:`~repro.core.exchange.LoopNest` /
+  :func:`~repro.core.exchange.enumerate_exchange_variants` — the Exchange +
+  LoopFusion candidate generator (paper §III).
+* :class:`~repro.core.degree.DegreeController` — dynamic parallelism degree
+  (paper §IV, ``omp_set_num_threads`` analogue).
+* :class:`~repro.core.tuner.Tuner` / :class:`~repro.core.tuner.RuntimeSelector`
+  — the three-layer tuner.
+* cost functions in :mod:`repro.core.cost`; searches in :mod:`repro.core.search`;
+  persistence in :mod:`repro.core.db`.
+"""
+from .cost import (
+    FX100,
+    TPU_V5E,
+    CompiledRooflineCost,
+    CostFunction,
+    HardwareSpec,
+    MemoryCost,
+    RooflineTerms,
+    WallClockCost,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+)
+from .db import TuningDB
+from .degree import DegreeController
+from .exchange import (
+    GKV_FIGURE_OF_VARIANT,
+    ExchangeVariant,
+    LoopNest,
+    enumerate_exchange_variants,
+)
+from .params import BasicParams, ParamSpace, PerfParam, pp_key
+from .region import ATRegion
+from .search import (
+    CoordinateDescent,
+    ExhaustiveSearch,
+    SearchResult,
+    SuccessiveHalving,
+    Trial,
+)
+from .tuner import Tuner, RuntimeSelector
+
+__all__ = [
+    "BasicParams",
+    "ParamSpace",
+    "PerfParam",
+    "pp_key",
+    "ATRegion",
+    "LoopNest",
+    "ExchangeVariant",
+    "enumerate_exchange_variants",
+    "GKV_FIGURE_OF_VARIANT",
+    "DegreeController",
+    "Tuner",
+    "RuntimeSelector",
+    "TuningDB",
+    "CostFunction",
+    "WallClockCost",
+    "CompiledRooflineCost",
+    "MemoryCost",
+    "RooflineTerms",
+    "HardwareSpec",
+    "TPU_V5E",
+    "FX100",
+    "collective_bytes_from_hlo",
+    "roofline_from_compiled",
+    "ExhaustiveSearch",
+    "CoordinateDescent",
+    "SuccessiveHalving",
+    "SearchResult",
+    "Trial",
+]

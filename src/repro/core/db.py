@@ -1,0 +1,124 @@
+"""Persistent tuning database.
+
+FIBER's layered AT only works if results survive between layers: install-time
+results are consulted at before-execution time, before-execution results at
+run time.  ppOpen-AT persists them in generated source; we persist JSON.
+
+Layout (one JSON file)::
+
+    {
+      "<bp_fingerprint>": {
+         "bp": {...},                      # human-readable BP echo
+         "layer": "before_execution",
+         "best": {"point": {...}, "cost": 1.2e-3},
+         "trials": {"<pp_key>": cost, ...},
+         "history": [...]                  # run-time layer observations
+      }, ...
+    }
+
+Writes are atomic (tmp + rename) so a crashed AT run never corrupts the DB —
+the same discipline the checkpointing layer uses.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Mapping, Optional
+
+from .params import BasicParams, pp_key
+
+
+class TuningDB:
+    def __init__(self, path: Optional[str] = None) -> None:
+        self.path = path
+        self._lock = threading.Lock()
+        self._data: Dict[str, Dict[str, Any]] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self._data = json.load(f)
+
+    # -- write ---------------------------------------------------------------
+
+    def record_trial(
+        self, bp: BasicParams, point: Mapping[str, Any], cost: float, layer: str
+    ) -> None:
+        with self._lock:
+            entry = self._entry(bp, layer)
+            entry["trials"][pp_key(point)] = cost
+            best = entry.get("best")
+            if best is None or cost < best["cost"]:
+                entry["best"] = {"point": dict(point), "cost": cost}
+            self._flush()
+
+    def record_best(
+        self, bp: BasicParams, point: Mapping[str, Any], cost: float, layer: str
+    ) -> None:
+        with self._lock:
+            entry = self._entry(bp, layer)
+            entry["best"] = {"point": dict(point), "cost": cost}
+            self._flush()
+
+    def record_runtime_observation(
+        self, bp: BasicParams, point: Mapping[str, Any], cost: float
+    ) -> None:
+        """Run-time layer: append a measured (point, cost) observation."""
+        with self._lock:
+            entry = self._entry(bp, "run_time")
+            entry.setdefault("history", []).append(
+                {"point": dict(point), "cost": cost}
+            )
+            self._flush()
+
+    # -- read ----------------------------------------------------------------
+
+    def best_point(self, bp: BasicParams) -> Optional[Dict[str, Any]]:
+        entry = self._data.get(bp.fingerprint())
+        if entry and entry.get("best"):
+            return dict(entry["best"]["point"])
+        return None
+
+    def best_cost(self, bp: BasicParams) -> Optional[float]:
+        entry = self._data.get(bp.fingerprint())
+        if entry and entry.get("best"):
+            return float(entry["best"]["cost"])
+        return None
+
+    def trial_cost(self, bp: BasicParams, point: Mapping[str, Any]) -> Optional[float]:
+        entry = self._data.get(bp.fingerprint())
+        if entry:
+            c = entry.get("trials", {}).get(pp_key(point))
+            return None if c is None else float(c)
+        return None
+
+    def trials(self, bp: BasicParams) -> Dict[str, float]:
+        entry = self._data.get(bp.fingerprint(), {})
+        return dict(entry.get("trials", {}))
+
+    def history(self, bp: BasicParams) -> list:
+        entry = self._data.get(bp.fingerprint(), {})
+        return list(entry.get("history", []))
+
+    # -- internals -------------------------------------------------------------
+
+    def _entry(self, bp: BasicParams, layer: str) -> Dict[str, Any]:
+        fp = bp.fingerprint()
+        if fp not in self._data:
+            self._data[fp] = {"bp": bp.asdict(), "layer": layer, "trials": {}}
+        self._data[fp]["layer"] = layer
+        return self._data[fp]
+
+    def _flush(self) -> None:
+        if not self.path:
+            return
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f, indent=1, default=str)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)

@@ -1,0 +1,213 @@
+"""The ``Exchange`` + ``LoopFusion`` candidate generator (paper §III).
+
+ppOpen-AT's model: an N-deep perfect loop nest whose body is an elementwise
+"calculation kernel".  Two composable transforms produce the candidate
+family:
+
+* **LoopFusion (collapse)** — merge the innermost ``N-m+1`` dims into one
+  loop, leaving an ``m``-deep nest (m = 1..N).
+* **Exchange (directive position)** — place the parallel directive on loop
+  ``j`` of the transformed nest (j = 1..m).
+
+This yields ``N(N+1)/2`` variants — exactly the paper's 10 for the GKV
+quadruple loop (Figs 1–10).
+
+JAX realization of one variant ``(m, j)`` with parallelism degree ``d``
+(the ``omp_set_num_threads`` analogue — see :mod:`repro.core.degree`):
+
+* loops **above** the directive run sequentially (``lax.map`` steps), as in
+  OpenMP where each outer iteration forks/joins a parallel region;
+* the **directive loop** (length P) is split into ``min(d, P)`` chunks of
+  ``ceil(P/d)`` iterations — OpenMP static scheduling.  Chunks execute as
+  ``lax.map`` steps (this host has one core, so "threads" serialize; the
+  *structure* — grain size, vector shapes — is what the variant changes,
+  and it is the structure that the FX100 results are about: a 65-long loop
+  split 32 ways leaves 2-element vectors, killing pipelining there and
+  vectorization here);
+* loops **below** the directive are fully vectorized inside the body block
+  (collapse becomes a reshape — free under XLA, unlike the Fortran div/mod
+  index reconstruction; recorded as an assumption change in DESIGN.md).
+
+The same (m, j, d) family drives the Pallas kernel's (grid, BlockSpec)
+candidates in :mod:`repro.kernels.exb` — grid = outer×chunks, block = chunk
+× inner — so the paper's transform is applied identically at both levels.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial, reduce
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .params import ParamSpace, PerfParam
+from .region import ATRegion
+
+
+@dataclass(frozen=True)
+class ExchangeVariant:
+    """One candidate loop structure: m loops after collapse, directive on j."""
+
+    m: int  # loop count of transformed nest (innermost N-m+1 dims collapsed)
+    j: int  # 1-based directive depth in the transformed nest, 1 <= j <= m
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.j <= self.m):
+            raise ValueError(f"invalid variant (m={self.m}, j={self.j})")
+
+    def label(self, dim_names: Sequence[str]) -> str:
+        n = len(dim_names)
+        loops = [str(d) for d in dim_names[: self.m - 1]]
+        collapsed = "_".join(str(d) for d in dim_names[self.m - 1 :])
+        loops.append(collapsed)
+        marked = [f"OMP[{l}]" if i + 1 == self.j else l for i, l in enumerate(loops)]
+        return ">".join(marked)
+
+
+def enumerate_exchange_variants(ndims: int) -> List[ExchangeVariant]:
+    """All (collapse-depth × directive-position) candidates — N(N+1)/2 of them.
+
+    Ordered to match the paper's figures for N=4:
+    (4,2)=Fig1 original, (3,2)=Fig2, (2,2)=Fig3, (4,1)=Fig4, (3,1)=Fig5,
+    (2,1)=Fig6, (1,1)=Fig7, (4,3)=Fig8, (3,3)=Fig9, (4,4)=Fig10.
+    """
+    variants = []
+    for m in range(ndims, 0, -1):
+        for j in range(1, m + 1):
+            variants.append(ExchangeVariant(m=m, j=j))
+    return variants
+
+
+# The paper's figure numbering for the GKV quadruple loop (N=4).
+GKV_FIGURE_OF_VARIANT: Dict[Tuple[int, int], str] = {
+    (4, 2): "Fig1:original",
+    (3, 2): "Fig2:xy-collapse",
+    (2, 2): "Fig3:zxy-collapse",
+    (4, 1): "Fig4:omp@outermost",
+    (3, 1): "Fig5:omp@outermost+xy",
+    (2, 1): "Fig6:omp@outermost+zxy",
+    (1, 1): "Fig7:vzxy-collapse",
+    (4, 3): "Fig8:omp@depth3",
+    (3, 3): "Fig9:omp@mx_my",
+    (4, 4): "Fig10:omp@innermost",
+}
+
+
+def _prod(xs: Sequence[int]) -> int:
+    return reduce(lambda a, b: a * b, xs, 1)
+
+
+class LoopNest:
+    """An N-deep elementwise loop nest bracketed as an AT region.
+
+    ``body`` is a pure function ``body(inputs_block) -> output_block`` that
+    must be shape-polymorphic (elementwise kernels are).  ``inputs`` given to
+    :meth:`run_variant` / :meth:`reference` are a pytree whose array leaves
+    are all shaped exactly ``lengths`` (pre-broadcast by the caller; GKV's
+    rank-3 fields are broadcast against the rank-4 domain once, outside the
+    timed region, matching how the Fortran code streams them repeatedly).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        dims: Sequence[Tuple[str, int]],
+        body: Callable[[Any], Any],
+    ) -> None:
+        if not dims:
+            raise ValueError("LoopNest needs at least one dim")
+        self.name = name
+        self.dim_names = tuple(d[0] for d in dims)
+        self.lengths = tuple(int(d[1]) for d in dims)
+        self.body = body
+
+    # -- oracle ---------------------------------------------------------------
+
+    def reference(self, inputs: Any) -> Any:
+        """Whole-domain single-shot evaluation — the pure-jnp oracle."""
+        return self.body(inputs)
+
+    # -- candidate execution ----------------------------------------------------
+
+    def variant_fn(
+        self, variant: ExchangeVariant, degree: int
+    ) -> Callable[[Any], Any]:
+        """Build the pure callable for one (variant, degree) candidate."""
+        n = len(self.lengths)
+        if variant.m > n:
+            raise ValueError(f"variant {variant} exceeds nest depth {n}")
+        jj = variant.j - 1  # 0-based directive loop index in transformed nest
+        if jj < variant.m - 1:
+            # directive on an uncollapsed dim
+            outer_lens = self.lengths[:jj]
+            par_len = self.lengths[jj]
+            inner_shape = tuple(self.lengths[jj + 1 : variant.m - 1]) + (
+                _prod(self.lengths[variant.m - 1 :]),
+            )
+        else:
+            # directive on the collapsed innermost group
+            outer_lens = self.lengths[: variant.m - 1]
+            par_len = _prod(self.lengths[variant.m - 1 :])
+            inner_shape = ()
+
+        o_len = _prod(outer_lens)
+        nchunks = max(1, min(int(degree), par_len))  # threads beyond P idle
+        chunk = -(-par_len // nchunks)  # ceil — OpenMP static schedule grain
+        padded = nchunks * chunk
+        pad = padded - par_len
+        full = self.lengths
+
+        def run(inputs: Any) -> Any:
+            def to_blocks(x: jnp.ndarray) -> jnp.ndarray:
+                x = x.reshape((o_len, par_len) + inner_shape)
+                if pad:
+                    widths = [(0, 0)] * x.ndim
+                    widths[1] = (0, pad)
+                    x = jnp.pad(x, widths, mode="edge")
+                return x.reshape((o_len * nchunks, chunk) + inner_shape)
+
+            xs = jax.tree.map(to_blocks, inputs)
+            ys = lax.map(self.body, xs)
+
+            def from_blocks(y: jnp.ndarray) -> jnp.ndarray:
+                y = y.reshape((o_len, padded) + inner_shape)
+                if pad:
+                    y = lax.slice_in_dim(y, 0, par_len, axis=1)
+                return y.reshape(full)
+
+            return jax.tree.map(from_blocks, ys)
+
+        run.__name__ = f"{self.name}_{variant.label(self.dim_names)}_d{degree}"
+        return run
+
+    # -- AT region ----------------------------------------------------------------
+
+    def at_region(
+        self,
+        degrees: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        variants: Optional[Sequence[ExchangeVariant]] = None,
+    ) -> ATRegion:
+        """Bracket this nest as an AT region over (variant × degree).
+
+        This is the ``!oat$ install Exchange region start/end`` +
+        dynamic-thread-count PP of the paper, as one joint space (§V co-tunes
+        them because the optimal degree depends on the variant).
+        """
+        vs = tuple(variants or enumerate_exchange_variants(len(self.lengths)))
+        space = ParamSpace(
+            [
+                PerfParam("variant", tuple((v.m, v.j) for v in vs)),
+                PerfParam("degree", tuple(int(d) for d in degrees)),
+            ]
+        )
+
+        def instantiate(point: Mapping[str, Any]) -> Callable[[Any], Any]:
+            m, j = point["variant"]
+            return self.variant_fn(ExchangeVariant(m=m, j=j), point["degree"])
+
+        return ATRegion(
+            name=self.name, space=space, instantiate=instantiate, oracle=self.reference
+        )

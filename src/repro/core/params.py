@@ -1,0 +1,174 @@
+"""FIBER parameter vocabulary (paper §II.A).
+
+FIBER defines autotuning as::
+
+    AT = argmin_{PP} cost(PP | BP)
+
+at each of three layers (install / before-execution / run-time), where
+
+* **BP** (basic parameter set) — facts fixed by the user / environment:
+  problem size, mesh shape, max parallelism degree.  BP is *identity*: the
+  tuning database is keyed by a BP fingerprint.
+* **PP** (performance parameter set) — the knobs the tuner may move: loop
+  variant, parallelism degree, block shape, sharding rule, ...
+
+This module gives both sets a concrete, hashable, JSON-serializable form.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Mapping, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Basic parameter set (BP)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BasicParams:
+    """The FIBER basic parameter set: everything the tuner must NOT change.
+
+    ``entries`` maps names to plain values (ints, strs, tuples).  Examples:
+    ``{"arch": "gkv_exb", "iv": 16, "iz": 16, "mx": 128, "my": 65}`` or
+    ``{"arch": "llama3-405b", "shape": "train_4k", "mesh": "pod16x16"}``.
+    """
+
+    entries: Tuple[Tuple[str, Any], ...]
+
+    @classmethod
+    def make(cls, **kwargs: Any) -> "BasicParams":
+        return cls(tuple(sorted((k, _freeze(v)) for k, v in kwargs.items())))
+
+    def __getitem__(self, key: str) -> Any:
+        for k, v in self.entries:
+            if k == key:
+                return v
+        raise KeyError(key)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def asdict(self) -> Dict[str, Any]:
+        return dict(self.entries)
+
+    def fingerprint(self) -> str:
+        """Stable hash used as the tuning-database key."""
+        blob = json.dumps(self.entries, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        inner = ", ".join(f"{k}={v!r}" for k, v in self.entries)
+        return f"BP({inner})"
+
+
+def _freeze(v: Any) -> Any:
+    if isinstance(v, list):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Performance parameter set (PP)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PerfParam:
+    """One tunable knob: a name and its finite candidate domain.
+
+    The paper's two PPs are ``loop_variant`` (Figs 1-10) and ``num_threads``
+    (1..32).  Ours add block shapes, sharding rules, remat policies, ...
+    Domains are always finite and explicit — ppOpen-AT generates *all*
+    candidates ahead of time, and so do we.
+    """
+
+    name: str
+    domain: Tuple[Any, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.domain) == 0:
+            raise ValueError(f"PerfParam {self.name!r} has an empty domain")
+        if len(set(map(repr, self.domain))) != len(self.domain):
+            raise ValueError(f"PerfParam {self.name!r} has duplicate candidates")
+
+
+class ParamSpace:
+    """The cartesian PP space plus an optional feasibility predicate.
+
+    ``constraint(point) -> bool`` prunes infeasible combinations (e.g. a
+    Pallas block shape whose VMEM footprint exceeds budget — the TPU version
+    of "don't give each thread 2 iterations").
+    """
+
+    def __init__(self, params: Sequence[PerfParam], constraint=None) -> None:
+        names = [p.name for p in params]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate PerfParam names: {names}")
+        self.params: Tuple[PerfParam, ...] = tuple(params)
+        self.constraint = constraint
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.params)
+
+    def size(self) -> int:
+        n = 1
+        for p in self.params:
+            n *= len(p.domain)
+        return n
+
+    def feasible(self, point: Mapping[str, Any]) -> bool:
+        return self.constraint is None or bool(self.constraint(dict(point)))
+
+    def points(self) -> Iterator[Dict[str, Any]]:
+        """Every feasible PP assignment (exhaustive enumeration)."""
+        domains = [p.domain for p in self.params]
+        for combo in itertools.product(*domains):
+            point = dict(zip(self.names, combo))
+            if self.feasible(point):
+                yield point
+
+    def default(self) -> Dict[str, Any]:
+        """First feasible point — the untuned baseline."""
+        for point in self.points():
+            return point
+        raise ValueError("ParamSpace has no feasible point")
+
+    def neighbours(self, point: Mapping[str, Any]) -> Iterator[Dict[str, Any]]:
+        """Coordinate-move neighbourhood (for hillclimb search): all feasible
+        points differing from ``point`` in exactly one parameter."""
+        for p in self.params:
+            for candidate in p.domain:
+                if candidate == point[p.name]:
+                    continue
+                moved = dict(point)
+                moved[p.name] = candidate
+                if self.feasible(moved):
+                    yield moved
+
+    def validate(self, point: Mapping[str, Any]) -> None:
+        for p in self.params:
+            if p.name not in point:
+                raise KeyError(f"PP point missing {p.name!r}")
+            if point[p.name] not in p.domain:
+                raise ValueError(
+                    f"{point[p.name]!r} not in domain of {p.name!r}: {p.domain}"
+                )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        inner = ", ".join(f"{p.name}[{len(p.domain)}]" for p in self.params)
+        return f"ParamSpace({inner}, size={self.size()})"
+
+
+def pp_key(point: Mapping[str, Any]) -> str:
+    """Canonical JSON key for one PP assignment (DB storage)."""
+    return json.dumps({k: _freeze(v) for k, v in sorted(point.items())}, default=str)

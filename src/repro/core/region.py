@@ -1,0 +1,115 @@
+"""AT regions — the ``!oat$ install Exchange(...) region start/end`` analogue.
+
+In ppOpen-AT the software developer brackets a loop nest with directives; the
+preprocessor generates all tuning candidates as subroutines and a dispatcher
+that calls the selected one.  In `repro` the same three pieces are:
+
+* a :class:`~repro.core.params.ParamSpace` — the candidate family,
+* ``instantiate(point) -> callable`` — the "generated subroutine" for one
+  candidate (pure function of the region's inputs),
+* :class:`ATRegion` — the dispatcher: calls the currently-selected candidate,
+  can be pointed at a tuning DB so selection follows the tuner's argmin.
+
+All candidates exist ahead of time (ppOpen-AT's "light-load AT, no dynamic
+code generation"): ``precompile()`` AOT-compiles every candidate with
+``jax.jit(...).lower(...).compile()`` so run-time switching is a dict lookup.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence
+
+import jax
+
+from .db import TuningDB
+from .params import BasicParams, ParamSpace, pp_key
+
+
+class ATRegion:
+    """A tunable computation with a finite, pre-generated candidate family.
+
+    ``instantiate(point)`` must return a *pure* callable; every candidate
+    must be semantically identical (the tests assert allclose across the
+    whole family against the region's ``oracle``).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        space: ParamSpace,
+        instantiate: Callable[[Mapping[str, Any]], Callable[..., Any]],
+        oracle: Optional[Callable[..., Any]] = None,
+    ) -> None:
+        self.name = name
+        self.space = space
+        self.instantiate = instantiate
+        self.oracle = oracle
+        self.selected: Dict[str, Any] = space.default()
+        self._compiled: Dict[str, Callable[..., Any]] = {}
+
+    # -- selection -------------------------------------------------------------
+
+    def select(self, point: Mapping[str, Any]) -> None:
+        self.space.validate(point)
+        self.selected = dict(point)
+
+    def select_from_db(self, db: TuningDB, bp: BasicParams) -> bool:
+        """Adopt the tuned argmin for this BP if the DB has one."""
+        best = db.best_point(bp)
+        if best is not None:
+            self.select(best)
+            return True
+        return False
+
+    # -- execution -------------------------------------------------------------
+
+    def candidate(self, point: Mapping[str, Any]) -> Callable[..., Any]:
+        key = pp_key(point)
+        if key in self._compiled:
+            return self._compiled[key]
+        # cache the instantiation: candidates are pure, and re-instantiating
+        # a jitted candidate per call would re-trace every step
+        fn = self.instantiate(point)
+        self._compiled[key] = fn
+        return fn
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self.candidate(self.selected)(*args, **kwargs)
+
+    # -- ahead-of-time candidate generation -------------------------------------
+
+    def precompile(
+        self,
+        example_args: Sequence[Any],
+        points: Optional[Sequence[Mapping[str, Any]]] = None,
+        jit: bool = True,
+    ) -> int:
+        """AOT-compile candidates so run-time selection never compiles.
+
+        Returns the number of candidates compiled.  This is ppOpen-AT's
+        pre-generated-subroutine model: pay all codegen cost up front
+        (install / before-execution time), switch for free at run time.
+        """
+        pts = list(points) if points is not None else list(self.space.points())
+        count = 0
+        for point in pts:
+            key = pp_key(point)
+            if key in self._compiled:
+                continue
+            fn = self.instantiate(point)
+            if jit:
+                jfn = jax.jit(fn)
+                compiled = jfn.lower(*example_args).compile()
+                self._compiled[key] = compiled
+            else:
+                self._compiled[key] = fn
+            count += 1
+        return count
+
+    def compiled_points(self) -> int:
+        return len(self._compiled)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"ATRegion({self.name!r}, space={self.space!r}, "
+            f"selected={self.selected})"
+        )

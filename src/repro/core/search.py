@@ -1,0 +1,154 @@
+"""Search strategies over a :class:`~repro.core.params.ParamSpace`.
+
+ppOpen-AT's before-execution layer enumerates every generated candidate (the
+spaces are deliberately small — the paper limits candidate counts to avoid
+code expansion).  We keep exhaustive search as the default and faithful
+strategy, and add two cheaper strategies for the larger spaces our
+distributed PPs create:
+
+* :class:`ExhaustiveSearch` — measure every feasible point (the paper's).
+* :class:`CoordinateDescent` — the hillclimb used by §Perf: sweep one
+  parameter at a time, keep the argmin, repeat until a full pass moves
+  nothing.  Exact for separable costs, good for near-separable ones.
+* :class:`SuccessiveHalving` — measure all points with a cheap/noisy budget,
+  keep the best half, re-measure with doubled budget, repeat.  Useful when
+  cost evaluation itself is expensive (wall-clock with many repeats).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from .params import ParamSpace, pp_key
+
+
+@dataclass
+class Trial:
+    point: Dict[str, Any]
+    cost: float
+
+
+@dataclass
+class SearchResult:
+    best: Trial
+    trials: List[Trial] = field(default_factory=list)
+    evaluations: int = 0
+
+    def costs_by_key(self) -> Dict[str, float]:
+        return {pp_key(t.point): t.cost for t in self.trials}
+
+
+class Search:
+    def run(self, space: ParamSpace, cost) -> SearchResult:  # pragma: no cover
+        raise NotImplementedError
+
+
+class ExhaustiveSearch(Search):
+    """Measure every feasible PP point; return the argmin.
+
+    ``on_trial`` (if given) is called after each evaluation — the tuner uses
+    it for incremental DB writes so an interrupted AT run resumes where it
+    stopped (fault tolerance applies to tuning too).
+    """
+
+    def __init__(self, on_trial: Optional[Callable[[Trial], None]] = None) -> None:
+        self.on_trial = on_trial
+
+    def run(self, space: ParamSpace, cost) -> SearchResult:
+        trials: List[Trial] = []
+        for point in space.points():
+            t = Trial(dict(point), float(cost(point)))
+            trials.append(t)
+            if self.on_trial:
+                self.on_trial(t)
+        if not trials:
+            raise ValueError("no feasible points to search")
+        best = min(trials, key=lambda t: t.cost)
+        return SearchResult(best=best, trials=trials, evaluations=len(trials))
+
+
+class CoordinateDescent(Search):
+    """Greedy one-parameter-at-a-time descent from ``start`` (or default)."""
+
+    def __init__(
+        self,
+        start: Optional[Mapping[str, Any]] = None,
+        max_passes: int = 8,
+        on_trial: Optional[Callable[[Trial], None]] = None,
+    ) -> None:
+        self.start = dict(start) if start is not None else None
+        self.max_passes = max_passes
+        self.on_trial = on_trial
+
+    def run(self, space: ParamSpace, cost) -> SearchResult:
+        point = dict(self.start) if self.start is not None else space.default()
+        space.validate(point)
+        seen: Dict[str, float] = {}
+
+        def eval_point(p: Dict[str, Any]) -> float:
+            key = pp_key(p)
+            if key not in seen:
+                seen[key] = float(cost(p))
+                trial = Trial(dict(p), seen[key])
+                trials.append(trial)
+                if self.on_trial:
+                    self.on_trial(trial)
+            return seen[key]
+
+        trials: List[Trial] = []
+        best_cost = eval_point(point)
+        for _ in range(self.max_passes):
+            moved = False
+            for param in space.params:
+                best_val = point[param.name]
+                for candidate in param.domain:
+                    if candidate == point[param.name]:
+                        continue
+                    trial_point = dict(point)
+                    trial_point[param.name] = candidate
+                    if not space.feasible(trial_point):
+                        continue
+                    c = eval_point(trial_point)
+                    if c < best_cost:
+                        best_cost, best_val, moved = c, candidate, True
+                point[param.name] = best_val
+            if not moved:
+                break
+        best = min(trials, key=lambda t: t.cost)
+        return SearchResult(best=best, trials=trials, evaluations=len(trials))
+
+
+class SuccessiveHalving(Search):
+    """Rung-based elimination for expensive measured costs.
+
+    ``cost`` must accept ``(point, budget)`` where budget is a positive int
+    (e.g. number of timing repeats); wrap a plain cost with
+    ``lambda p, b: cost(p)`` if budget-insensitive.
+    """
+
+    def __init__(self, initial_budget: int = 1, eta: int = 2) -> None:
+        self.initial_budget = initial_budget
+        self.eta = eta
+
+    def run(self, space: ParamSpace, cost) -> SearchResult:
+        alive: List[Dict[str, Any]] = [dict(p) for p in space.points()]
+        if not alive:
+            raise ValueError("no feasible points to search")
+        budget = self.initial_budget
+        trials: List[Trial] = []
+        evaluations = 0
+        while True:
+            scored: List[Trial] = []
+            for p in alive:
+                c = float(cost(p, budget))
+                evaluations += 1
+                t = Trial(dict(p), c)
+                scored.append(t)
+                trials.append(t)
+            scored.sort(key=lambda t: t.cost)
+            if len(scored) == 1:
+                return SearchResult(best=scored[0], trials=trials, evaluations=evaluations)
+            keep = max(1, len(scored) // self.eta)
+            alive = [t.point for t in scored[:keep]]
+            budget *= self.eta

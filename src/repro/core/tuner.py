@@ -1,0 +1,113 @@
+"""The FIBER three-layer tuner (paper §II.A, §IV.A).
+
+Layer semantics:
+
+* **install** — BP-independent sweeps done once per build (kernel block
+  shapes on reference shapes).  Results seed later layers.
+* **before_execution** — the user has fixed BP (problem size, mesh, max
+  degree).  The tuner searches the PP space with the given cost function and
+  records the argmin.  This is where the paper measures all candidates
+  ("Perform AT for changing the number of threads for all candidates...").
+* **run_time** — the selected candidate is used for real work; measured step
+  times are appended to the DB.  If the selected candidate regresses
+  (straggler, interference), :meth:`RuntimeSelector.observe` re-selects the
+  next-best *precompiled* candidate — switching is free because every
+  candidate was AOT-compiled (paper §IV.D: "we can change the number of
+  threads frequently at run-time").
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Mapping, Optional
+
+from .db import TuningDB
+from .params import BasicParams, ParamSpace, pp_key
+from .region import ATRegion
+from .search import ExhaustiveSearch, Search, SearchResult, Trial
+
+LAYERS = ("install", "before_execution", "run_time")
+
+
+class Tuner:
+    def __init__(self, db: Optional[TuningDB] = None, search: Optional[Search] = None):
+        self.db = db or TuningDB()
+        self.search = search or ExhaustiveSearch()
+
+    def tune(
+        self,
+        region: ATRegion,
+        bp: BasicParams,
+        cost: Callable[[Mapping[str, Any]], float],
+        layer: str = "before_execution",
+        select: bool = True,
+    ) -> SearchResult:
+        """AT = argmin_PP cost(PP | BP).  Records every trial in the DB."""
+        if layer not in LAYERS:
+            raise ValueError(f"unknown FIBER layer {layer!r}; expected one of {LAYERS}")
+
+        def caching_cost(point: Mapping[str, Any]) -> float:
+            prior = self.db.trial_cost(bp, point)
+            if prior is not None:
+                return prior  # resume support: interrupted AT re-uses trials
+            c = float(cost(point))
+            self.db.record_trial(bp, point, c, layer)
+            return c
+
+        result = self.search.run(region.space, caching_cost)
+        self.db.record_best(bp, result.best.point, result.best.cost, layer)
+        if select:
+            region.select(result.best.point)
+        return result
+
+
+class RuntimeSelector:
+    """FIBER run-time layer: monitor the live candidate, re-select if it regresses.
+
+    This doubles as our straggler-mitigation hook: a candidate whose measured
+    cost drifts ``tolerance``× above its tuned cost (e.g. a slow host, noisy
+    neighbour, thermal throttle) is demoted and the next-best precompiled
+    candidate takes over — no recompilation, mirroring the paper's free
+    ``omp_set_num_threads`` switches.
+    """
+
+    def __init__(
+        self,
+        region: ATRegion,
+        bp: BasicParams,
+        db: TuningDB,
+        tolerance: float = 1.5,
+        window: int = 8,
+    ) -> None:
+        self.region = region
+        self.bp = bp
+        self.db = db
+        self.tolerance = tolerance
+        self.window = window
+        self._recent: list = []
+        ranked = sorted(db.trials(bp).items(), key=lambda kv: kv[1])
+        self._ranking = [k for k, _ in ranked]
+        self.switches = 0
+
+    def observe(self, measured_cost: float) -> bool:
+        """Record a live measurement; returns True if a re-selection happened."""
+        self.db.record_runtime_observation(self.bp, self.region.selected, measured_cost)
+        self._recent.append(measured_cost)
+        if len(self._recent) > self.window:
+            self._recent.pop(0)
+        tuned = self.db.trial_cost(self.bp, self.region.selected)
+        if tuned is None or len(self._recent) < self.window:
+            return False
+        median = sorted(self._recent)[len(self._recent) // 2]
+        if median <= self.tolerance * tuned:
+            return False
+        # Demote: pick the best-ranked candidate that is not the current one.
+        current = pp_key(self.region.selected)
+        for key in self._ranking:
+            if key != current:
+                import json
+
+                self.region.select(json.loads(key))
+                self._recent.clear()
+                self.switches += 1
+                return True
+        return False

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMDataset, ServingRequest, synthetic_requests
+
+__all__ = ["SyntheticLMDataset", "ServingRequest", "synthetic_requests"]

@@ -1,0 +1,26 @@
+"""Distribution layer: meshes, logical-axis sharding rules, collective knobs."""
+from .sharding import (
+    ShardingRule,
+    RULES,
+    activation_sharding,
+    constrain,
+    current_rule,
+    logical_to_spec,
+    opt_state_sharding,
+    param_sharding,
+    spec_for,
+    zero_spec,
+)
+
+__all__ = [
+    "ShardingRule",
+    "RULES",
+    "activation_sharding",
+    "constrain",
+    "current_rule",
+    "logical_to_spec",
+    "opt_state_sharding",
+    "param_sharding",
+    "spec_for",
+    "zero_spec",
+]

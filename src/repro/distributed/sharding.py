@@ -1,0 +1,275 @@
+"""Logical-axis sharding: rules are data, and rule choice is a tunable PP.
+
+Every parameter (:class:`repro.models.spec.ParamSpec`) and the key
+activations carry *logical* axis names.  A :class:`ShardingRule` maps logical
+names to mesh axes; applying a rule yields ``PartitionSpec`` s.  Because the
+rule is an ordinary value, the before-execution tuner searches over rules the
+same way the paper searches over loop variants — sharding layout is our
+"directive position" at the distributed level (DESIGN.md §2).
+
+Divisibility guard: a dimension is only sharded if its size divides the mesh
+axis product; otherwise that axis silently stays replicated (e.g. 8 KV heads
+on a 16-way model axis).  This mirrors OpenMP threads idling when the loop is
+shorter than the team.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisTarget = Union[None, str, Tuple[str, ...]]
+
+
+def is_spec_leaf(x: Any) -> bool:
+    """Duck-typed ParamSpec check (avoids a circular import with
+    repro.models, whose layer modules import ``constrain`` from here)."""
+    return hasattr(x, "shape") and hasattr(x, "logical_axes")
+
+
+@dataclass(frozen=True)
+class ShardingRule:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+
+    name: str
+    mapping: Tuple[Tuple[str, AxisTarget], ...]
+
+    @classmethod
+    def make(cls, name: str, **mapping: AxisTarget) -> "ShardingRule":
+        return cls(name, tuple(sorted(mapping.items())))
+
+    def target(self, logical: Optional[str]) -> AxisTarget:
+        if logical is None:
+            return None
+        return dict(self.mapping).get(logical)
+
+    def asdict(self) -> Dict[str, AxisTarget]:
+        return dict(self.mapping)
+
+
+def _mesh_axis_size(mesh: Mesh, target: AxisTarget) -> int:
+    if target is None:
+        return 1
+    if isinstance(target, str):
+        return mesh.shape[target]
+    n = 1
+    for t in target:
+        n *= mesh.shape[t]
+    return n
+
+
+def logical_to_spec(
+    rule: ShardingRule,
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+) -> P:
+    """PartitionSpec for one array, with divisibility guard per axis."""
+    entries = []
+    used: set = set()
+    for size, logical in zip(shape, logical_axes):
+        target = rule.target(logical)
+        if target is None:
+            entries.append(None)
+            continue
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        # drop axes absent from this mesh (e.g. "pod" on the single-pod mesh)
+        # or already consumed by an earlier dim of this array
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes:
+            entries.append(None)
+            continue
+        if size % _mesh_axis_size(mesh, axes) != 0:
+            entries.append(None)  # replicate: "idle threads"
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_sharding(rule: ShardingRule, spec_tree: Any, mesh: Mesh) -> Any:
+    """NamedShardings for a whole ParamSpec pytree."""
+
+    def one(s) -> NamedSharding:
+        return NamedSharding(mesh, logical_to_spec(rule, s.shape, s.logical_axes, mesh))
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec_leaf)
+
+
+def spec_for(
+    rule: ShardingRule,
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(rule, shape, logical_axes, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (used by model code via `constrain`)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: ContextVar[Optional[Tuple[Mesh, ShardingRule]]] = ContextVar(
+    "repro_active_sharding", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rule: ShardingRule):
+    token = _ACTIVE.set((mesh, rule))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rule() -> Optional[ShardingRule]:
+    ctx = _ACTIVE.get()
+    return ctx[1] if ctx else None
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """`with_sharding_constraint` keyed by logical names; no-op outside a
+    :func:`activation_sharding` context (so model code runs unsharded on CPU
+    smoke tests unchanged)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, rule = ctx
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"constrain: {logical_axes} vs rank {x.ndim}")
+    spec = logical_to_spec(rule, x.shape, logical_axes, mesh)
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+
+def zero_spec(
+    rule: ShardingRule,
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    zero_axes: Tuple[str, ...] = ("data",),
+) -> P:
+    """Param spec + additionally shard the largest unsharded dim over
+    ``zero_axes`` (ZeRO-1: optimizer state scattered over data parallels)."""
+    base = logical_to_spec(rule, shape, logical_axes, mesh)
+    entries = list(base) + [None] * (len(shape) - len(base))
+    free = [a for a in zero_axes if mesh.shape.get(a, 1) > 1 and not _axis_used(entries, a)]
+    if not free:
+        return base
+    zsize = int(np.prod([mesh.shape[a] for a in free]))
+    # largest unsharded, divisible dim
+    cand = [
+        (shape[i], i)
+        for i in range(len(shape))
+        if entries[i] is None and shape[i] % zsize == 0 and shape[i] >= zsize
+    ]
+    if not cand:
+        return base
+    _, dim = max(cand)
+    entries[dim] = free[0] if len(free) == 1 else tuple(free)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _axis_used(entries, axis: str) -> bool:
+    for e in entries:
+        if e == axis:
+            return True
+        if isinstance(e, tuple) and axis in e:
+            return True
+    return False
+
+
+def opt_state_sharding(
+    rule: ShardingRule,
+    opt_spec_tree: Any,
+    mesh: Mesh,
+    zero_axes: Tuple[str, ...] = ("data",),
+) -> Any:
+    """NamedShardings for the optimizer-state spec tree (ZeRO-1)."""
+
+    def one(s) -> NamedSharding:
+        return NamedSharding(
+            mesh, zero_spec(rule, s.shape, s.logical_axes, mesh, zero_axes)
+        )
+
+    return jax.tree.map(one, opt_spec_tree, is_leaf=is_spec_leaf)
+
+
+# ---------------------------------------------------------------------------
+# The candidate rule set (PP domain at the distributed level)
+# ---------------------------------------------------------------------------
+
+# Axis name conventions: mesh axes are "pod", "data", "model" (mesh.py);
+# logical names are the ParamSpec vocabulary + activation names
+# ("batch", "seq", "act_embed", "act_ffn", "act_heads", "act_kv", "act_vocab",
+#  "act_experts", "act_rnn").
+
+def _base(name: str, **over: AxisTarget) -> ShardingRule:
+    mapping: Dict[str, AxisTarget] = {
+        # params
+        "vocab": "model",
+        "embed": None,
+        "embed_table": None,
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "experts": "model",
+        "rnn": "model",
+        "state": None,
+        "conv": None,
+        "layers": None,
+        "frames": None,
+        # activations
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_embed": None,
+        "act_ffn": "model",
+        "act_heads": "model",
+        "act_kv": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+        "act_rnn": "model",
+        "kv_slots": None,
+        "moe_capacity": None,
+    }
+    mapping.update(over)
+    return ShardingRule.make(name, **mapping)
+
+
+RULES: Dict[str, ShardingRule] = {
+    # Pure tensor parallel on `model`, pure data parallel on `pod`+`data`.
+    "tp": _base("tp"),
+    # ZeRO-3/FSDP-style: weights additionally sharded over `data` on their
+    # embed axis; XLA inserts all-gathers at use and reduce-scatters on grads.
+    "fsdp_tp": _base("fsdp_tp", embed="data"),
+    # FSDP over both data axes (multi-pod weight sharding; DCN all-gathers).
+    "fsdp2_tp": _base("fsdp2_tp", embed=("pod", "data")),
+    # Sequence parallelism for activations (long prefill): tokens sharded on
+    # `model` along seq between attention/FFN regions.
+    "tp_seq": _base("tp_seq", seq="model"),
+    # Flash-decoding: the KV cache length dim sharded over `model` (softmax
+    # over a sharded axis -> XLA inserts max/sum all-reduces).  The decode
+    # answer when kv_heads < model-axis size (all 10 assigned archs).
+    "tp_kvseq": _base("tp_kvseq", kv_slots="model"),
+    # Expert parallel with data-sharded dispatch capacity: the MoE (E, C, d)
+    # buffer partitions over (experts->model, capacity->data), turning the
+    # dispatch into an all-to-all instead of a replicated all-reduce.
+    "tp_ep": _base("tp_ep", moe_capacity=("pod", "data")),
+    "fsdp_tp_ep": _base("fsdp_tp_ep", embed="data", moe_capacity=("pod", "data")),
+}

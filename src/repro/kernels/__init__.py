@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (validated with
+interpret=True on this CPU host; BlockSpec tiling targets TPU v5e VMEM).
+
+* exb             — GKV exb_realspcal (the paper's §III tuning target)
+* stress          — Seism3D update_stress (the paper's §IV target)
+* flash_attention — causal GQA flash attention, VMEM-resident scores
+* ssm_scan        — Mamba-1 selective scan, sequential-grid carry
+* rglru_scan      — RG-LRU recurrence, sequential-grid carry
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper +
+AT region over block shapes), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,2 @@
+from . import ops, ref
+from .exb import exb_pallas, vmem_bytes

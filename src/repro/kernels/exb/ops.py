@@ -1,0 +1,66 @@
+"""Jitted wrapper + AT region for the exb Pallas kernel.
+
+``exb_region()`` brackets the kernel's (block_iv, block_iz) family exactly
+like the paper brackets the Fortran loop nest — same ParamSpace machinery,
+with a VMEM-feasibility constraint standing in for "enough iterations per
+thread" (DESIGN.md §2), and an analytic cost model for install-time AT on a
+host without the target hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ATRegion, ParamSpace, PerfParam
+from repro.core.cost import TPU_V5E, HardwareSpec
+
+from .exb import exb_pallas, vmem_bytes
+from .ref import exb_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_iv", "block_iz", "interpret"))
+def exb(inp: Dict[str, jnp.ndarray], block_iv: int = 1, block_iz: int = 16,
+        interpret: bool = True):
+    return exb_pallas(inp, block_iv=block_iv, block_iz=block_iz, interpret=interpret)
+
+
+def exb_region(dims=(16, 16, 128, 65), vmem_budget: int = 16 * 2**20) -> ATRegion:
+    iv, iz, mx, my = dims
+    divisors = lambda n: tuple(d for d in (1, 2, 4, 8, 16, 32) if n % d == 0 and d <= n)
+    space = ParamSpace(
+        [
+            PerfParam("block_iv", divisors(iv)),
+            PerfParam("block_iz", divisors(iz)),
+        ],
+        constraint=lambda p: vmem_bytes(p["block_iv"], p["block_iz"], mx, my)
+        <= vmem_budget,
+    )
+
+    def instantiate(point: Mapping[str, Any]):
+        biv, biz = point["block_iv"], point["block_iz"]
+        return lambda inp: exb(inp, block_iv=biv, block_iz=biz)
+
+    return ATRegion("exb_pallas", space, instantiate, oracle=exb_ref)
+
+
+def analytic_cost(
+    point: Mapping[str, Any],
+    dims=(16, 16, 128, 65),
+    hw: HardwareSpec = TPU_V5E,
+    grid_overhead_s: float = 1.5e-6,
+) -> float:
+    """Install-time cost model: HBM-stream time + per-program overhead.
+
+    The kernel is memory-bound (arithmetic intensity ≈ 24 flops / 56 bytes),
+    so cost ≈ bytes/BW + n_programs × launch overhead; finer grids pipeline
+    better but pay overhead — the same trade the FX100 thread count makes.
+    """
+    iv, iz, mx, my = dims
+    biv, biz = point["block_iv"], point["block_iz"]
+    n_programs = (iv // biv) * (iz // biz)
+    bytes_hbm = 6 * iv * iz * mx * my * 4 + 8 * iz * mx * my * 4 * (iv // biv)
+    # 3-D fields are re-streamed once per iv-block row (index_map reuse)
+    return bytes_hbm / hw.hbm_bandwidth + n_programs * grid_overhead_s

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the GKV exb kernel (split re/im layout).
+
+The TPU adaptation UNPACKS the Fortran complex packing into separate
+float32 planes (DESIGN.md §2): the original cmplx() trick packs two
+independent real fields; on TPU separate planes vectorize on the VPU
+without complex emulation, and the 3-D fields stay 3-D (the iv broadcast
+happens through BlockSpec index maps, not materialized memory).
+
+Inputs (C-order):
+    df1_re/df1_im/df2_re/df2_im : (iv, iz, mx, my) f32
+    ex_re/ex_im/ey_re/ey_im/bx_re/bx_im/by_re/by_im : (iz, mx, my) f32
+    vl : (iv,) f32
+Output: out_re/out_im : (iv, iz, mx, my) f32
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CS1 = 0.8775825618903728
+CEF = 1.0 / (2 * 128 * 2 * 64)
+
+
+def exb_ref(inp: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    vl = inp["vl"][:, None, None, None]  # (iv,1,1,1)
+    ey_re = inp["ey_re"][None] - CS1 * vl * inp["by_re"][None]
+    ey_im = inp["ey_im"][None] - CS1 * vl * inp["by_im"][None]
+    ex_re = inp["ex_re"][None] - CS1 * vl * inp["bx_re"][None]
+    ex_im = inp["ex_im"][None] - CS1 * vl * inp["bx_im"][None]
+    out_re = (inp["df1_re"] * ey_re - inp["df2_re"] * ex_re) * CEF
+    out_im = (inp["df1_im"] * ey_im - inp["df2_im"] * ex_im) * CEF
+    return out_re, out_im
+
+
+def make_inputs(key: jax.Array, dims=(16, 16, 128, 65)) -> Dict[str, jnp.ndarray]:
+    iv, iz, mx, my = dims
+    names4 = ["df1_re", "df1_im", "df2_re", "df2_im"]
+    names3 = ["ex_re", "ex_im", "ey_re", "ey_im", "bx_re", "bx_im", "by_re", "by_im"]
+    ks = jax.random.split(key, len(names4) + len(names3) + 1)
+    out = {}
+    for n, k in zip(names4, ks):
+        out[n] = jax.random.normal(k, (iv, iz, mx, my), jnp.float32)
+    for n, k in zip(names3, ks[len(names4):]):
+        out[n] = jax.random.normal(k, (iz, mx, my), jnp.float32)
+    out["vl"] = jax.random.normal(ks[-1], (iv,), jnp.float32)
+    return out

@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention (forward) with tunable VMEM block shapes.
+
+Grid (B, H, nq, nkv) — the last (fastest) grid dim walks KV blocks so the
+online-softmax state lives in VMEM scratch across those steps (the standard
+TPU flash layout: sequential grid = free accumulator carry).  Block shapes
+(block_q, block_kv) are the AT knobs: q/k/v tiles must fit VMEM and the
+MXU wants both ≥ 128.
+
+GQA is handled in the index maps: the KV block index ignores the query-head
+grid coordinate beyond h // G — no KV replication in HBM.
+
+Compared to the XLA path (models.attention.flash_attention_xla), the score
+block never leaves VMEM — on the tinyllama train cell the XLA path's score
+round-trips are ~60 % of its memory-roofline term (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(
+    q_ref,   # (1, block_q, 1, hd)
+    k_ref,   # (1, block_kv, 1, hd)
+    v_ref,   # (1, block_kv, 1, hd)
+    o_ref,   # (1, block_q, 1, hd)
+    m_ref,   # scratch (block_q,)
+    l_ref,   # scratch (block_q,)
+    acc_ref,  # scratch (block_q, hd)
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    nkv: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :]  # (bq, hd)
+    k = k_ref[0, :, 0, :]  # (bkv, hd)
+    v = v_ref[0, :, 0, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        off = qi * block_q - kj * block_kv
+        mask = (
+            jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0) + off
+            >= jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        )
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kj == nkv - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / l_ref[...][:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, S, KV, hd)
+    v: jnp.ndarray,
+    block_q: int = 512,
+    block_kv: int = 512,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq, bkv = min(block_q, S), min(block_kv, S)
+    if S % bq or S % bkv:
+        raise ValueError(f"seq {S} must divide blocks ({bq},{bkv})")
+    nq, nkv = S // bq, S // bkv
+    grid = (B, H, nq, nkv)
+
+    q_spec = pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0))
+    kv_spec = pl.BlockSpec((1, bkv, 1, hd), lambda b, h, i, j: (b, j, h // G, 0))
+    o_spec = pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        scale=1.0 / math.sqrt(hd),
+        block_q=bq,
+        block_kv=bkv,
+        nkv=nkv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((bq,), jnp.float32),
+            _scratch((bq,), jnp.float32),
+            _scratch((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def vmem_bytes(block_q: int, block_kv: int, hd: int) -> int:
+    pad = lambda n: -(-n // 128) * 128
+    q = block_q * pad(hd) * 2
+    kv = 2 * block_kv * pad(hd) * 2
+    s = block_q * pad(block_kv) * 4
+    scr = block_q * 4 * 2 + block_q * pad(hd) * 4
+    return q + kv + s + scr + block_q * pad(hd) * 2

@@ -1,0 +1,42 @@
+"""Jitted wrapper + AT region for the flash attention Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+
+from repro.core import ATRegion, ParamSpace, PerfParam
+
+from .flash_attention import flash_attention, vmem_bytes
+from .ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_kv", "causal", "interpret")
+)
+def attention(q, k, v, block_q: int = 512, block_kv: int = 512,
+              causal: bool = True, interpret: bool = True):
+    return flash_attention(
+        q, k, v, block_q=block_q, block_kv=block_kv, causal=causal,
+        interpret=interpret,
+    )
+
+
+def flash_region(
+    seq_len: int, head_dim: int, vmem_budget: int = 16 * 2**20
+) -> ATRegion:
+    blocks = tuple(
+        b for b in (128, 256, 512, 1024, 2048) if b <= seq_len and seq_len % b == 0
+    ) or (seq_len,)
+    space = ParamSpace(
+        [PerfParam("block_q", blocks), PerfParam("block_kv", blocks)],
+        constraint=lambda p: vmem_bytes(p["block_q"], p["block_kv"], head_dim)
+        <= vmem_budget,
+    )
+
+    def instantiate(point: Mapping[str, Any]):
+        bq, bkv = point["block_q"], point["block_kv"]
+        return lambda q, k, v: attention(q, k, v, block_q=bq, block_kv=bkv)
+
+    return ATRegion("flash_attention_pallas", space, instantiate, oracle=attention_ref)

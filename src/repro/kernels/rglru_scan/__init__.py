@@ -1,0 +1,2 @@
+from . import ops, ref
+from .rglru_scan import rglru_scan, vmem_bytes

@@ -1,0 +1,39 @@
+"""Jitted wrapper + AT region for the RG-LRU Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+
+from repro.core import ATRegion, ParamSpace, PerfParam
+
+from .ref import rglru_scan_ref
+from .rglru_scan import rglru_scan, vmem_bytes
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "chunk", "interpret"))
+def scan(x, r, i, lam, block_w: int = 512, chunk: int = 128, interpret: bool = True):
+    return rglru_scan(x, r, i, lam, block_w=block_w, chunk=chunk,
+                      interpret=interpret)
+
+
+def rglru_region(
+    width: int, seq_len: int, vmem_budget: int = 16 * 2**20
+) -> ATRegion:
+    w_blocks = tuple(
+        b for b in (128, 256, 512, 1024, 2560) if b <= width and width % b == 0
+    ) or (width,)
+    chunks = tuple(
+        c for c in (32, 64, 128, 256, 512) if c <= seq_len and seq_len % c == 0
+    ) or (seq_len,)
+    space = ParamSpace(
+        [PerfParam("block_w", w_blocks), PerfParam("chunk", chunks)],
+        constraint=lambda p: vmem_bytes(p["block_w"], p["chunk"]) <= vmem_budget,
+    )
+
+    def instantiate(point: Mapping[str, Any]):
+        bw, ck = point["block_w"], point["chunk"]
+        return lambda x, r, i, lam: scan(x, r, i, lam, block_w=bw, chunk=ck)
+
+    return ATRegion("rglru_scan_pallas", space, instantiate, oracle=rglru_scan_ref)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (post-gate quantities)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+C_FACTOR = 8.0
+
+
+def rglru_scan_ref(
+    x: jnp.ndarray,    # (B, S, W)  conv'd inputs
+    r: jnp.ndarray,    # (B, S, W)  recurrence gate, in (0,1)
+    i: jnp.ndarray,    # (B, S, W)  input gate, in (0,1)
+    lam: jnp.ndarray,  # (W,)       Λ parameter
+) -> jnp.ndarray:
+    softplus_neg_lam = jax.nn.softplus(-lam.astype(jnp.float32))
+
+    def step(h, inputs):
+        x_t, r_t, i_t = inputs
+        a = jnp.exp(-C_FACTOR * r_t * softplus_neg_lam)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_t * x_t)
+        return h, h
+
+    B, S, W = x.shape
+    h0 = jnp.zeros((B, W), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2).astype(jnp.float32),
+        r.transpose(1, 0, 2).astype(jnp.float32),
+        i.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, hs = lax.scan(step, h0, xs)
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def make_inputs(key, B=2, S=64, W=32):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, S, W), jnp.float32)
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, W), jnp.float32))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, W), jnp.float32))
+    u = jax.random.uniform(ks[3], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u / (1 - u))
+    return x, r, i, lam

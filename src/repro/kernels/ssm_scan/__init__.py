@@ -1,0 +1,2 @@
+from . import ops, ref
+from .ssm_scan import ssm_scan, vmem_bytes

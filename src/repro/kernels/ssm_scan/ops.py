@@ -1,0 +1,42 @@
+"""Jitted wrapper + AT region for the selective-scan Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+
+from repro.core import ATRegion, ParamSpace, PerfParam
+
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan, vmem_bytes
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def scan(x, dt, A, Bc, Cc, D, block_d: int = 512, chunk: int = 128,
+         interpret: bool = True):
+    return ssm_scan(x, dt, A, Bc, Cc, D, block_d=block_d, chunk=chunk,
+                    interpret=interpret)
+
+
+def ssm_region(
+    d_inner: int, seq_len: int, n_state: int, vmem_budget: int = 16 * 2**20
+) -> ATRegion:
+    d_blocks = tuple(
+        b for b in (128, 256, 512, 1024, 2048) if b <= d_inner and d_inner % b == 0
+    ) or (d_inner,)
+    chunks = tuple(
+        c for c in (32, 64, 128, 256, 512) if c <= seq_len and seq_len % c == 0
+    ) or (seq_len,)
+    space = ParamSpace(
+        [PerfParam("block_d", d_blocks), PerfParam("chunk", chunks)],
+        constraint=lambda p: vmem_bytes(p["block_d"], p["chunk"], n_state)
+        <= vmem_budget,
+    )
+
+    def instantiate(point: Mapping[str, Any]):
+        bd, ck = point["block_d"], point["chunk"]
+        return lambda x, dt, A, Bc, Cc, D: scan(x, dt, A, Bc, Cc, D,
+                                                block_d=bd, chunk=ck)
+
+    return ATRegion("ssm_scan_pallas", space, instantiate, oracle=ssm_scan_ref)

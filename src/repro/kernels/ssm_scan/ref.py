@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the Mamba selective-scan kernel.
+
+Recurrence over already-projected per-step quantities (the kernel consumes
+dt, B, C post-projection — the projections are plain matmuls XLA handles):
+
+    h_t = exp(dt_t ⊗ A) ⊙ h_{t-1} + (dt_t · x_t) ⊗ B_t
+    y_t = h_t · C_t + D ⊙ x_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan_ref(
+    x: jnp.ndarray,   # (B, S, D)   post-conv, post-silu activations
+    dt: jnp.ndarray,  # (B, S, D)   softplus'd step sizes
+    A: jnp.ndarray,   # (D, N)      negative decay rates
+    Bc: jnp.ndarray,  # (B, S, N)
+    Cc: jnp.ndarray,  # (B, S, N)
+    D: jnp.ndarray,   # (D,)
+) -> jnp.ndarray:
+    Bsz, S, Dd = x.shape
+    N = A.shape[1]
+
+    def step(h, inputs):
+        x_t, dt_t, B_t, C_t = inputs
+        decay = jnp.exp(dt_t[..., None] * A)  # (B, D, N)
+        h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, Dd, N), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        Bc.transpose(1, 0, 2).astype(jnp.float32),
+        Cc.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)  # (B, S, D)
+    return (y + x.astype(jnp.float32) * D).astype(x.dtype)
+
+
+def make_inputs(key, B=2, S=64, D=32, N=8):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, S, D), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D), jnp.float32) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N), jnp.float32) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    Cc = jax.random.normal(ks[4], (B, S, N), jnp.float32)
+    Dp = jax.random.normal(ks[5], (D,), jnp.float32)
+    return x, dt, A, Bc, Cc, Dp

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the Mamba selective scan — chunked recurrence.
+
+TPU adaptation of the CUDA selective-scan kernel: instead of one thread
+block per (batch, channel-tile) with warp-level parallel prefix (a GPU
+shared-memory pattern), we use the *sequential-grid carry* idiom: grid
+(B, d-blocks, chunks), the h-state lives in VMEM scratch and persists
+across the chunk dimension (the fastest-varying one).  Inside a chunk a
+``fori_loop`` steps the recurrence with everything VMEM-resident — the
+(S, D, N) decay tensor never exists anywhere, in any memory.
+
+Tunables: (block_d, chunk) — channel tile width and temporal chunk length.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(
+    x_ref,   # (1, chunk, bd)
+    dt_ref,  # (1, chunk, bd)
+    b_ref,   # (1, chunk, N)
+    c_ref,   # (1, chunk, N)
+    a_ref,   # (bd, N)
+    d_ref,   # (bd,)
+    y_ref,   # (1, chunk, bd)
+    h_ref,   # scratch (bd, N) fp32
+    *,
+    chunk: int,
+):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...]  # (bd, N)
+
+    def step(t, h):
+        x_t = x_ref[0, t, :].astype(jnp.float32)   # (bd,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (bd,)
+        B_t = b_ref[0, t, :].astype(jnp.float32)   # (N,)
+        C_t = c_ref[0, t, :].astype(jnp.float32)   # (N,)
+        decay = jnp.exp(dt_t[:, None] * A)         # (bd, N)
+        h = decay * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y = jnp.sum(h * C_t[None, :], axis=-1)     # (bd,)
+        y = y + x_t * d_ref[...]
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+def ssm_scan(
+    x: jnp.ndarray,   # (B, S, D)
+    dt: jnp.ndarray,  # (B, S, D)
+    A: jnp.ndarray,   # (D, N)
+    Bc: jnp.ndarray,  # (B, S, N)
+    Cc: jnp.ndarray,  # (B, S, N)
+    D: jnp.ndarray,   # (D,)
+    block_d: int = 512,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    Bsz, S, Dd = x.shape
+    N = A.shape[1]
+    bd = min(block_d, Dd)
+    ck = min(chunk, S)
+    if Dd % bd or S % ck:
+        raise ValueError(f"blocks ({bd},{ck}) must divide (D={Dd}, S={S})")
+    grid = (Bsz, Dd // bd, S // ck)
+
+    xd_spec = pl.BlockSpec((1, ck, bd), lambda b, d, c: (b, c, d))
+    bn_spec = pl.BlockSpec((1, ck, N), lambda b, d, c: (b, c, 0))
+    a_spec = pl.BlockSpec((bd, N), lambda b, d, c: (d, 0))
+    dd_spec = pl.BlockSpec((bd,), lambda b, d, c: (d,))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(_ssm_kernel, chunk=ck)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[xd_spec, xd_spec, bn_spec, bn_spec, a_spec, dd_spec],
+        out_specs=xd_spec,
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, Dd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bc, Cc, A, D)
+
+
+def vmem_bytes(block_d: int, chunk: int, n_state: int) -> int:
+    pad = lambda n: -(-n // 128) * 128
+    io = 3 * chunk * pad(block_d) * 4  # x, dt, y
+    bn = 2 * chunk * pad(n_state) * 4
+    state = block_d * pad(n_state) * 4 * 2  # A + h scratch
+    return io + bn + state

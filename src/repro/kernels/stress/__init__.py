@@ -1,0 +1,2 @@
+from . import ops, ref
+from .stress import stress_pallas, vmem_bytes

@@ -1,0 +1,33 @@
+"""Jitted wrapper + AT region for the stress Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+
+from repro.core import ATRegion, ParamSpace, PerfParam
+
+from .ref import stress_ref
+from .stress import stress_pallas, vmem_bytes
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_j", "interpret"))
+def stress(inp, block_k: int = 8, block_j: int = 64, interpret: bool = True):
+    return stress_pallas(inp, block_k=block_k, block_j=block_j, interpret=interpret)
+
+
+def stress_region(dims=(64, 64, 64), vmem_budget: int = 16 * 2**20) -> ATRegion:
+    nk, nj, ni = dims
+    divs = lambda n: tuple(d for d in (1, 2, 4, 8, 16, 32, 64) if n % d == 0 and d <= n)
+    space = ParamSpace(
+        [PerfParam("block_k", divs(nk)), PerfParam("block_j", divs(nj))],
+        constraint=lambda p: vmem_bytes(p["block_k"], p["block_j"], ni)
+        <= vmem_budget,
+    )
+
+    def instantiate(point: Mapping[str, Any]):
+        bk, bj = point["block_k"], point["block_j"]
+        return lambda inp: stress(inp, block_k=bk, block_j=bj)
+
+    return ATRegion("stress_pallas", space, instantiate, oracle=stress_ref)

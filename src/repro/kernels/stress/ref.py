@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Seism3D update_stress kernel."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DT = 5.0e-3
+
+INPUT_NAMES = (
+    "Sxx", "Syy", "Szz", "Sxy", "Sxz", "Syz",
+    "dxVx", "dyVy", "dzVz", "dxVy", "dyVx", "dxVz", "dzVx", "dyVz", "dzVy",
+    "lam", "rig",
+)
+
+
+def stress_ref(inp: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    rl, rm = inp["lam"], inp["rig"]
+    rm2 = 2.0 * rm
+    rlrm2 = rl + rm2
+    d3 = inp["dxVx"] + inp["dyVy"] + inp["dzVz"]
+    return {
+        "Sxx": inp["Sxx"] + DT * (rlrm2 * d3 - rm2 * (inp["dyVy"] + inp["dzVz"])),
+        "Syy": inp["Syy"] + DT * (rlrm2 * d3 - rm2 * (inp["dxVx"] + inp["dzVz"])),
+        "Szz": inp["Szz"] + DT * (rlrm2 * d3 - rm2 * (inp["dxVx"] + inp["dyVy"])),
+        "Sxy": inp["Sxy"] + DT * inp["rig"] * (inp["dxVy"] + inp["dyVx"]),
+        "Sxz": inp["Sxz"] + DT * inp["rig"] * (inp["dxVz"] + inp["dzVx"]),
+        "Syz": inp["Syz"] + DT * inp["rig"] * (inp["dyVz"] + inp["dzVy"]),
+    }
+
+
+def make_inputs(key: jax.Array, dims=(64, 64, 64)) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, len(INPUT_NAMES))
+    out = {}
+    for n, k in zip(INPUT_NAMES, ks):
+        x = jax.random.normal(k, dims, jnp.float32)
+        if n in ("lam", "rig"):
+            x = 1.0 + jnp.abs(x)
+        out[n] = x
+    return out

@@ -1,0 +1,35 @@
+"""Production serve CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import synthetic_requests
+    from repro.models import init_params, param_specs
+    from repro.runtime import Server
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
+    server = Server(cfg, params, batch_size=args.requests)
+    out = server.run(
+        synthetic_requests(cfg, args.requests, args.prompt_len, args.new_tokens)
+    )
+    print(f"served {len(out)} requests, {server.stats.tokens_out} tokens, "
+          f"{server.stats.decode_tok_per_s:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

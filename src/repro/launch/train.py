@@ -1,0 +1,45 @@
+"""Production train CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 100 --ckpt-dir /tmp/run1 [--smoke]
+
+On this host the full configs are CPU-prohibitive; --smoke (default) uses
+the reduced config.  On a real TPU slice the same entry point shards
+params/opt-state with the tuned sharding rule (see launch/dryrun.py for the
+rule selection machinery).
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import SyntheticLMDataset
+    from repro.optim import AdamWConfig
+    from repro.runtime import Trainer, TrainLoopConfig
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(total_steps=args.steps),
+        TrainLoopConfig(
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+            n_microbatches=args.microbatches,
+        ),
+    )
+    ds = SyntheticLMDataset(cfg, global_batch=args.batch, seq_len=args.seq)
+    hist = trainer.run(ds)
+    print(f"final loss: {hist['loss'][-1]:.4f} after {len(hist['loss'])} steps")
+
+
+if __name__ == "__main__":
+    main()

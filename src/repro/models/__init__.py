@@ -1,0 +1,40 @@
+"""Model zoo substrate: 10 LM-family architectures in pure JAX."""
+from .config import ModelConfig
+from .model import (
+    analytic_param_count,
+    analytic_step_flops,
+    decode_fn,
+    init_cache,
+    input_logical_axes,
+    input_specs,
+    make_concrete_batch,
+    param_specs,
+    prefill_fn,
+    train_loss,
+)
+from .spec import (
+    ParamSpec,
+    as_shape_dtype_structs,
+    count_params,
+    init_params,
+    is_spec_leaf,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "param_specs",
+    "train_loss",
+    "prefill_fn",
+    "decode_fn",
+    "init_cache",
+    "input_logical_axes",
+    "input_specs",
+    "make_concrete_batch",
+    "analytic_param_count",
+    "analytic_step_flops",
+    "as_shape_dtype_structs",
+    "count_params",
+    "init_params",
+    "is_spec_leaf",
+]

@@ -1,0 +1,440 @@
+"""GQA attention: full, blocked-causal (flash-style), local-window, decode.
+
+The blocked-causal path is the pure-XLA flash algorithm (online softmax over
+KV blocks under a double ``lax.scan``) and doubles as the reference semantics
+for the Pallas kernel in :mod:`repro.kernels.flash_attention`.  Block sizes
+``attn_block_q`` / ``attn_block_kv`` are performance parameters surfaced to
+the tuner.
+
+Note on causal waste: the baseline blocked path computes *all* (q, kv) block
+pairs and masks the upper triangle, costing ~2× the useful attention FLOPs.
+``skip_noncausal_blocks=True`` enumerates only the ~n²/2 visible block pairs
+(a §Perf hillclimb item; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import mrope_apply, rmsnorm, rope_apply
+from .spec import ParamSpec
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(
+    cfg: ModelConfig, layers: Optional[int] = None, cross: bool = False
+) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    L = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    spec: Dict[str, ParamSpec] = {
+        "wq": ParamSpec(L + (d, h, hd), la + ("embed", "q_heads", "head_dim")),
+        "wk": ParamSpec(L + (d, kv, hd), la + ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec(L + (d, kv, hd), la + ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec(L + (h, hd, d), la + ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        spec["bq"] = ParamSpec(L + (h, hd), la + ("q_heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec(L + (kv, hd), la + ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec(L + (kv, hd), la + ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = ParamSpec(L + (hd,), la + ("head_dim",), init="ones")
+        spec["k_norm"] = ParamSpec(L + (hd,), la + ("head_dim",), init="ones")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+
+def project_qkv(
+    x: jnp.ndarray,
+    p: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    positions: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd), with bias/qk_norm/RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = _headwise_rms(q, p["q_norm"], cfg.norm_eps)
+        k = _headwise_rms(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        if cfg.mrope:
+            q = mrope_apply(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = mrope_apply(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = rope_apply(q, positions, cfg.rope_theta)
+            k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _headwise_rms(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def output_proj(o: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Materialized-scores attention (small seq / encoder / oracle)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        Sk = k.shape[1]
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def blocked_causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_q: int,
+    block_kv: int,
+    skip_noncausal_blocks: bool = False,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention under lax.scan (pure XLA).
+
+    Memory: O(block_q × block_kv) scores per step instead of O(S²).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    if S % bq or S % bkv:
+        raise ValueError(f"seq {S} must divide block sizes ({bq}, {bkv})")
+    nq, nkv = S // bq, S // bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(qi, q_blk):
+        # q_blk: (B, bq, KV, G, hd)
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32)
+            s = s * scale
+            off = qi * bq - kj * bkv
+            mask = jnp.arange(bq)[:, None] + off >= jnp.arange(bkv)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        if skip_noncausal_blocks:
+            # Only kv blocks whose start <= q block end are visible.  The
+            # count is dynamic per q block, so slice a static prefix when nq
+            # == nkv-aligned; here we use lax.fori_loop with dynamic bound.
+            n_vis = (qi * bq + bq - 1) // bkv + 1
+
+            def body(j, carry):
+                k_blk = lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+                v_blk = lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+                carry, _ = kv_step(carry, (j, k_blk, v_blk))
+                return carry
+
+            m, l, acc = lax.fori_loop(0, n_vis, body, (m0, l0, a0))
+        else:
+            (m, l, acc), _ = lax.scan(
+                kv_step, (m0, l0, a0), (jnp.arange(nkv), kb, vb)
+            )
+        out = acc / l[..., None]
+        return out.astype(q.dtype)  # (B, KV, G, bq, hd)
+
+    outs = lax.map(lambda args: one_q_block(*args), (jnp.arange(nq), qb))
+    # (nq, B, KV, G, bq, hd) -> (B, S, H, hd)
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KV * G, hd)
+    return o
+
+
+def _flash_forward_blocks(q, k, v, block_q, block_kv):
+    """Shared forward core: returns (o, lse) with lse = m + log l, fp32
+    (B, KV, G, S).  Shapes as in :func:`blocked_causal_attention`."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq, bkv = min(block_q, S), min(block_kv, S)
+    nq, nkv = S // bq, S // bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(qi, q_blk):
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32)
+            s = s * scale
+            # scalar-offset causal mask: i + (qi*bq - kj*bkv) >= j.  Keeping
+            # the block indices inside a scalar stops XLA from hoisting a
+            # stacked (nq, nkv, bq, bkv) mask buffer out of the loops.
+            off = qi * bq - kj * bkv
+            mask = jnp.arange(bq)[:, None] + off >= jnp.arange(bkv)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nkv), kb, vb))
+        out = (acc / l[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l)
+        return out, lse  # (B,KV,G,bq,hd), (B,KV,G,bq)
+
+    outs, lses = lax.map(lambda args: one_q_block(*args), (jnp.arange(nq), qb))
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KV * G, hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, S)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, block_q, block_kv):
+    o, lse = _flash_forward_blocks(q, k, v, block_q, block_kv)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(block_q, block_kv, res, do):
+    """Flash backward: recompute scores per block pair from (q,k,lse);
+    saved residuals are only (q, k, v, o, lse) — O(S·d), not O(S²)."""
+    q, k, v, o, lse = res
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq, bkv = min(block_q, S), min(block_kv, S)
+    nq, nkv = S // bq, S // bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    # delta_i = rowsum(do ⊙ o) per query position
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    )  # (B, S, H)
+    delta = delta.reshape(B, S, KV, G).transpose(0, 2, 3, 1)  # (B,KV,G,S)
+
+    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    dob = do.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 2, 3, 4)
+    lse_b = lse.reshape(B, KV, G, nq, bq).transpose(3, 0, 1, 2, 4)  # (nq,B,KV,G,bq)
+    delta_b = delta.reshape(B, KV, G, nq, bq).transpose(3, 0, 1, 2, 4)
+
+    def p_block(qi, kj, q_blk, k_blk, lse_blk):
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32)
+        s = s * scale
+        off = qi * bq - kj * bkv
+        mask = (jnp.arange(bq)[:, None] + off >= jnp.arange(bkv)[None, :])[
+            None, None, None
+        ]
+        return jnp.where(mask, jnp.exp(s - lse_blk[..., None]), 0.0)
+
+    # pass A: dq — map over q blocks, scan kv blocks
+    def dq_block(args):
+        qi, q_blk, do_blk, lse_blk, delta_blk = args
+
+        def kv_step(dq_acc, inputs):
+            kj, k_blk, v_blk = inputs
+            p = p_block(qi, kj, q_blk, k_blk, lse_blk)  # (B,KV,G,bq,bkv)
+            dp = jnp.einsum(
+                "bqkgd,bskd->bkgqs", do_blk, v_blk
+            ).astype(jnp.float32)
+            ds = p * (dp - delta_blk[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqs,bskd->bqkgd", ds.astype(k_blk.dtype), k_blk
+            ).astype(jnp.float32)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((B, bq, KV, G, hd), jnp.float32)
+        dq_acc, _ = lax.scan(kv_step, dq0, (jnp.arange(nkv), kb, vb))
+        return dq_acc
+
+    dqs = lax.map(dq_block, (jnp.arange(nq), qb, dob, lse_b, delta_b))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd).astype(q.dtype)
+
+    # pass B: dk, dv — map over kv blocks, scan q blocks
+    def dkv_block(args):
+        kj, k_blk, v_blk = args
+
+        def q_step(carry, inputs):
+            dk_acc, dv_acc = carry
+            qi, q_blk, do_blk, lse_blk, delta_blk = inputs
+            p = p_block(qi, kj, q_blk, k_blk, lse_blk)
+            dv_acc = dv_acc + jnp.einsum(
+                "bkgqs,bqkgd->bskd", p.astype(do_blk.dtype), do_blk
+            ).astype(jnp.float32)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_blk, v_blk).astype(jnp.float32)
+            ds = p * (dp - delta_blk[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bkgqs,bqkgd->bskd", ds.astype(q_blk.dtype), q_blk
+            ).astype(jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((B, bkv, KV, hd), jnp.float32)
+        (dk_acc, dv_acc), _ = lax.scan(
+            q_step, (z, z), (jnp.arange(nq), qb, dob, lse_b, delta_b)
+        )
+        return dk_acc, dv_acc
+
+    dks, dvs = lax.map(dkv_block, (jnp.arange(nkv), kb, vb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_xla(q, k, v, block_q, block_kv):
+    """Causal flash attention with flash *backward* (pure XLA).
+
+    Identical math to :func:`blocked_causal_attention`; the custom VJP
+    recomputes block scores in the backward pass so the residuals are
+    O(B·S·H·hd) instead of the O(B·H·S²) that autodiff-through-scan saves.
+    On the tinyllama train_4k dry-run this is the difference between
+    21.4 GiB and < 2 GiB of temps per device (EXPERIMENTS.md §Dry-run).
+    """
+    o, _ = _flash_forward_blocks(q, k, v, block_q, block_kv)
+    return o
+
+
+flash_attention_xla.defvjp(_flash_fwd, _flash_bwd)
+
+
+def local_window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: int,
+    block_q: int,
+) -> jnp.ndarray:
+    """Sliding-window causal attention (RecurrentGemma's attention blocks).
+
+    Each q block attends to the ``window`` positions preceding it (inclusive
+    of self), via a static-size dynamic slice of front-padded K/V — FLOPs are
+    O(S × window), which is what makes the hybrid arch long_500k-eligible.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    if S % bq:
+        raise ValueError(f"seq {S} must divide block_q {bq}")
+    nq = S // bq
+    scale = 1.0 / math.sqrt(hd)
+    W = window
+
+    pad = [(0, 0), (W, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def one_q_block(qi, q_blk):
+        # visible kv span: [qi*bq - W, qi*bq + bq) in unpadded coords
+        start = qi * bq  # in padded coords this is (qi*bq - W) + W
+        k_blk = lax.dynamic_slice_in_dim(kp, start, W + bq, axis=1)
+        v_blk = lax.dynamic_slice_in_dim(vp, start, W + bq, axis=1)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32)
+        s = s * scale
+        iq = jnp.arange(bq)[:, None]
+        ik = jnp.arange(W + bq)[None, :]
+        # static band + one scalar-offset validity term (see flash mask note)
+        mask = (ik - W <= iq) & (iq - (ik - W) < W) & (ik + (qi * bq - W) >= 0)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, v_blk)
+        return o  # (B, bq, KV, G, hd)
+
+    outs = lax.map(lambda args: one_q_block(*args), (jnp.arange(nq), qb))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, L, KV, hd)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # (B,) or scalar int32 — valid prefix length
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    L = k_cache.shape[1]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    pos = jnp.arange(L)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if window is not None:
+        valid = valid & (pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+    return o.reshape(B, 1, H, hd)
+
+
+def cross_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Senc, KV, hd)
+    v: jnp.ndarray,
+) -> jnp.ndarray:
+    return full_attention(q, k, v, causal=False)

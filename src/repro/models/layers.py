@@ -1,0 +1,165 @@
+"""Shared layer primitives: norms, RoPE (incl. M-RoPE), MLPs, embeddings.
+
+Numerics policy (uniform across the zoo): parameters bf16, activations bf16,
+norm statistics and RoPE tables fp32, logits and losses fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm(x: jnp.ndarray, p: Dict[str, jnp.ndarray], eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE — standard and multimodal (M-RoPE, Qwen2-VL §3.1)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies, fp32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_apply(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Rotate ``x`` (..., seq, heads, head_dim) by ``positions`` (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_apply(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,  # (3, ..., seq) — temporal / height / width ids
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Multimodal RoPE: head_dim/2 frequency slots split across t/h/w position
+    streams (Qwen2-VL).  For pure-text tokens the three ids coincide and
+    M-RoPE degenerates to standard RoPE — the property tests assert this.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # Select which position stream drives each frequency slot.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    pos = positions.astype(jnp.float32)  # (3, ..., seq)
+    # ang[..., seq, half] = pos[sec_id[h]][..., seq] * freqs[h]
+    pos_per_slot = jnp.take(pos, sec_id, axis=0)  # (half, ..., seq)
+    pos_per_slot = jnp.moveaxis(pos_per_slot, 0, -1)  # (..., seq, half)
+    ang = pos_per_slot * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_spec(d: int, ff: int, layers: Optional[int] = None) -> Dict[str, ParamSpec]:
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    return {
+        "w_gate": ParamSpec(L + (d, ff), lax_ + ("embed", "ffn")),
+        "w_up": ParamSpec(L + (d, ff), lax_ + ("embed", "ffn")),
+        "w_down": ParamSpec(L + (ff, d), lax_ + ("ffn", "embed")),
+    }
+
+
+def swiglu(x: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, p["w_down"])
+
+
+def gelu_mlp_spec(d: int, ff: int, layers: Optional[int] = None) -> Dict[str, ParamSpec]:
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    return {
+        "w_in": ParamSpec(L + (d, ff), lax_ + ("embed", "ffn")),
+        "b_in": ParamSpec(L + (ff,), lax_ + ("ffn",), init="zeros"),
+        "w_out": ParamSpec(L + (ff, d), lax_ + ("ffn", "embed")),
+        "b_out": ParamSpec(L + (d,), lax_ + ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(x: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"]) + p["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"]) + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg: ModelConfig) -> ParamSpec:
+    # "embed_table" (not "embed"): FSDP rules shard weight d_model dims over
+    # data, but a (vocab/model, d_model/data) 2-D-sharded lookup table makes
+    # XLA SPMD replicate the whole gather ("involuntary full
+    # rematerialization") — measured +50 s collective on llama3 (§Perf).
+    return ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed_table"), init_scale=0.02)
+
+
+def unembed_spec(cfg: ModelConfig) -> ParamSpec:
+    return ParamSpec((cfg.d_model, cfg.vocab_size), ("embed_table", "vocab"))
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Logits in fp32 (loss numerics)."""
+    return jnp.einsum("...d,dv->...v", x, w).astype(jnp.float32)

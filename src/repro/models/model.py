@@ -1,0 +1,333 @@
+"""Unified model API over the 10-arch zoo.
+
+Entry points used by runtime / launch / tests:
+
+* :func:`param_specs`  — pytree of ParamSpec (no allocation).
+* :func:`train_loss`   — CE loss (+ MoE aux) for one batch.
+* :func:`prefill_fn` / :func:`decode_fn` — serving paths.
+* :func:`input_specs`  — ShapeDtypeStruct stand-ins per (arch × shape cell),
+  the dry-run's data contract.
+* :func:`analytic_param_count` — N for MODEL_FLOPS = 6·N·D (active-N for MoE).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import ModelConfig
+from .spec import ParamSpec, as_shape_dtype_structs, count_params
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_specs(cfg)
+    return transformer.decoder_specs(cfg)
+
+
+def analytic_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, ff, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    if cfg.qkv_bias:
+        attn += h * hd + 2 * kv * hd
+    if cfg.qk_norm:
+        attn += 2 * hd
+    embed = V * d if cfg.tie_embeddings else 2 * V * d
+
+    if cfg.family in ("dense", "vlm"):
+        per_layer = attn + 3 * d * ff + 2 * d
+        return embed + cfg.n_layers * per_layer + d
+    if cfg.family == "moe":
+        n_e = cfg.top_k if active_only else cfg.n_experts
+        per_layer = attn + d * cfg.n_experts + 3 * n_e * d * ff + 2 * d
+        return embed + cfg.n_layers * per_layer + d
+    if cfg.family == "ssm":
+        di, N, R, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.d_conv
+        per_layer = (
+            2 * d * di + K * di + di + di * (R + 2 * N) + R * di + di
+            + di * N + di + di * d + d
+        )
+        return embed + cfg.n_layers * per_layer + d
+    if cfg.family == "hybrid":
+        w, K = cfg.lru_width_, cfg.d_conv
+        rec = 2 * d * w + K * w + w + 2 * (w * w + w) + w + w * d
+        mlp = 3 * d * ff
+        per_rec = rec + mlp + 2 * d
+        per_attn = attn + mlp + 2 * d
+        n_attn = sum(
+            1
+            for i in range(cfg.n_layers)
+            if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn"
+        )
+        n_rec = cfg.n_layers - n_attn
+        return embed + n_rec * per_rec + n_attn * per_attn + d
+    if cfg.family == "audio":
+        enc_layer = attn + 2 * d * ff + ff + 2 * d + 4 * d
+        dec_layer = 2 * attn + 2 * d * ff + ff + 2 * d + 6 * d
+        return (
+            V * d
+            + cfg.encoder_len * d
+            + cfg.n_encoder_layers * enc_layer
+            + cfg.n_layers * dec_layer
+            + 4 * d
+        )
+    raise ValueError(cfg.family)
+
+
+def analytic_step_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """Useful FLOPs of one step: weight matmuls (6·N·D train / 2·N·D fwd,
+    N active) **plus** the sequence-interaction terms 6·N·D ignores —
+    attention score/value flops (dominant at 32k+), SSM/RG-LRU scan flops.
+
+    This is the MODEL_FLOPS numerator for §Roofline's useful-compute ratio;
+    causal masking is counted at 1/2 (only the lower triangle is useful).
+    """
+    n_active = analytic_param_count(cfg, active_only=True)
+    train = kind == "train"
+    fwd_mult = 3.0 if train else 1.0  # bwd ≈ 2× fwd
+    D = batch * (1 if kind == "decode" else seq)
+    total = (6.0 if train else 2.0) * n_active * D
+
+    h, hd = cfg.n_heads, cfg.head_dim_
+    L_attn = 0
+    window = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        L_attn = cfg.n_layers
+    elif cfg.family == "hybrid":
+        L_attn = sum(
+            1 for i in range(cfg.n_layers)
+            if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn"
+        )
+        window = cfg.local_window
+
+    if L_attn:
+        if kind == "decode":
+            ctx = min(seq, window) if window else seq
+            attn = L_attn * batch * ctx * h * hd * 4.0
+        else:
+            if window and seq > window:
+                attn = L_attn * batch * seq * window * h * hd * 4.0 * fwd_mult
+            else:
+                attn = L_attn * batch * seq * seq * h * hd * 4.0 * 0.5 * fwd_mult
+        total += attn
+
+    if cfg.is_encoder_decoder:
+        E = cfg.encoder_len
+        enc = cfg.n_encoder_layers * batch * E * E * h * hd * 4.0 * fwd_mult
+        dec_self = cfg.n_layers * batch * (
+            seq * hd * h * 4.0 if kind == "decode" else seq * seq * hd * h * 2.0
+        ) * (fwd_mult if kind != "decode" else 1.0)
+        cross = cfg.n_layers * batch * (
+            E * hd * h * 4.0 if kind == "decode" else seq * E * hd * h * 4.0
+        ) * (fwd_mult if kind != "decode" else 1.0)
+        total += (0.0 if kind == "decode" else enc) + dec_self + cross
+
+    if cfg.family == "ssm":
+        steps = 1 if kind == "decode" else seq
+        total += cfg.n_layers * batch * steps * cfg.d_inner * cfg.ssm_state * 6.0 * fwd_mult
+    if cfg.family == "hybrid":
+        L_rec = cfg.n_layers - L_attn
+        steps = 1 if kind == "decode" else seq
+        total += L_rec * batch * steps * cfg.lru_width_ * 8.0 * fwd_mult
+
+    return float(total)
+
+
+# ---------------------------------------------------------------------------
+# Losses & serving
+# ---------------------------------------------------------------------------
+
+
+def train_loss(
+    params: Dict[str, Any], batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> jnp.ndarray:
+    """Mean next-token CE (+ MoE aux).  ``batch`` comes from input_specs."""
+    if cfg.is_encoder_decoder:
+        logits, aux = encdec.forward(params, batch["frames"], batch["tokens"], cfg)
+    else:
+        logits, aux = transformer.forward(
+            params,
+            batch["tokens"],
+            cfg,
+            positions=batch.get("positions"),
+            vision_embeds=batch.get("vision_embeds"),
+        )
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    ce = _ce(logits, targets, mask)
+    return ce + aux
+
+
+def _ce(logits: jnp.ndarray, targets: jnp.ndarray, mask: Optional[jnp.ndarray]):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.prefill(params, batch["frames"], batch["tokens"], cfg)
+    return transformer.prefill(
+        params,
+        batch["tokens"],
+        cfg,
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+    )
+
+
+def decode_fn(params, batch, cache, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(params, batch["tokens"], cache, cfg)
+    return transformer.decode_step(
+        params, batch["tokens"], cache, cfg, positions=batch.get("positions")
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    if cfg.is_encoder_decoder:
+        return encdec.init_cache(cfg, batch, capacity)
+    return transformer.init_cache(cfg, batch, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run data contract)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(
+    cfg: ModelConfig, kind: str, global_batch: int, seq_len: int
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    kind: "train" | "prefill" | "decode".
+    For decode, ``seq_len`` is the KV-cache length; the step consumes one new
+    token (written at slot seq_len-1, attending over all seq_len slots).
+    """
+    B, S = global_batch, seq_len
+    f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def token_batch(seq: int) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"tokens": sds((B, seq), i32)}
+        if cfg.family == "vlm":
+            d["vision_embeds"] = sds((B, cfg.n_vision_tokens, cfg.d_model), bf16)
+            d["positions"] = sds((3, B, seq), i32)
+        if cfg.is_encoder_decoder:
+            d["frames"] = sds((B, cfg.encoder_len, cfg.d_model), bf16)
+        return d
+
+    if kind == "train":
+        batch = token_batch(S)
+        batch["targets"] = sds((B, S), i32)
+        batch["loss_mask"] = sds((B, S), f32)
+        return {"batch": batch}
+    if kind == "prefill":
+        return {"batch": token_batch(S)}
+    if kind == "decode":
+        batch = token_batch(1)
+        if cfg.family == "vlm":
+            batch["positions"] = sds((3, B, 1), i32)
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        # eval_shape of a closure over nothing: returns ShapeDtypeStruct tree
+        return {"batch": batch, "cache": cache}
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "vision_embeds": ("batch", None, None),
+    "positions": (None, "batch", "seq"),
+    "frames": ("batch", None, None),
+}
+
+_CACHE_AXES_BY_NAME = {
+    # attention KV caches: (layers, batch, slots, kv_heads, head_dim).
+    # "kv_slots" enables flash-decoding-style KV-length sharding: none of the
+    # assigned archs has kv_heads divisible by the 16-way model axis, so the
+    # cache length dim is the shardable one at decode time.
+    "k": (None, "batch", "kv_slots", "act_kv", None),
+    "v": (None, "batch", "kv_slots", "act_kv", None),
+    "self_k": (None, "batch", "kv_slots", "act_kv", None),
+    "self_v": (None, "batch", "kv_slots", "act_kv", None),
+    "cross_k": (None, "batch", "kv_slots", "act_kv", None),
+    "cross_v": (None, "batch", "kv_slots", "act_kv", None),
+    # ssm state: conv (L, B, K-1, d_inner), h (L, B, d_inner, N)
+    "conv": (None, "batch", None, "act_rnn"),
+    "h": (None, "batch", "act_rnn", None),
+    "len": (),
+}
+
+
+def _cache_leaf_axes(key: str, rank: int):
+    """Logical axes for one cache leaf, keyed by name suffix + rank."""
+    if key in _CACHE_AXES_BY_NAME and len(_CACHE_AXES_BY_NAME[key]) == rank:
+        return _CACHE_AXES_BY_NAME[key]
+    suffix = key.split("_")[-1]
+    if suffix in ("k", "v"):
+        return ((None,) * (rank - 4)) + ("batch", "kv_slots", "act_kv", None)
+    if suffix == "conv":
+        return ((None,) * (rank - 3)) + ("batch", None, "act_rnn")
+    if suffix == "h":
+        if rank == 4:  # (G, B, d_inner, N)
+            return (None, "batch", "act_rnn", None)
+        return ((None,) * (rank - 2)) + ("batch", "act_rnn")
+    if key == "len" or rank == 0:
+        return ()
+    return (None,) * rank
+
+
+def input_logical_axes(cfg: ModelConfig, kind: str, specs: Dict[str, Any]):
+    """Logical axis names for every leaf of :func:`input_specs` output —
+    the dry-run turns these into NamedShardings via the active rule."""
+    out: Dict[str, Any] = {}
+    out["batch"] = {
+        k: _BATCH_AXES.get(k, (None,) * len(v.shape))
+        for k, v in specs["batch"].items()
+    }
+    if "cache" in specs:
+        out["cache"] = {
+            k: _cache_leaf_axes(k, len(v.shape)) for k, v in specs["cache"].items()
+        }
+    return out
+
+
+def make_concrete_batch(
+    key: jax.Array, cfg: ModelConfig, kind: str, global_batch: int, seq_len: int
+) -> Dict[str, Any]:
+    """Random concrete inputs matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, kind, global_batch, seq_len)
+
+    def materialize(path_leaf):
+        sds, k = path_leaf
+        if sds.dtype == jnp.int32:
+            return jax.random.randint(k, sds.shape, 0, max(2, cfg.vocab_size - 1), jnp.int32)
+        return jax.random.normal(k, sds.shape, jnp.float32).astype(sds.dtype)
+
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = [materialize((l, k)) for l, k in zip(leaves, keys)]
+    tree = jax.tree.unflatten(treedef, out)
+    if kind == "train" and "loss_mask" in tree["batch"]:
+        mask = jnp.ones_like(tree["batch"]["loss_mask"])
+        if cfg.family == "vlm":
+            mask = mask.at[:, : cfg.n_vision_tokens].set(0.0)
+        tree["batch"]["loss_mask"] = mask
+    if kind == "decode":
+        # a plausible populated cache: len = capacity - 1
+        tree["cache"]["len"] = jnp.asarray(seq_len - 1, jnp.int32)
+    return tree

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts block with sort-based, capacity-bounded dispatch.
+
+Design constraints:
+
+* **FLOPs honesty** — the roofline analysis reads HLO FLOPs, so dispatch must
+  not inflate compute.  One-hot dispatch einsums cost O(T·E·C·d) — more FLOPs
+  than the experts themselves — so we dispatch by *sorting* token→expert
+  assignments (gathers/scatters are memory ops) into a dense ``(E, C, d)``
+  buffer and run experts as grouped matmuls with exactly
+  ``2·T·top_k·d·ff·3`` useful FLOPs (+ capacity slack).
+* **EP shardability** — the ``(E, C, d)`` buffer carries the ``act_experts``
+  logical axis; under the `tp`/EP rules the scatter/gather around it become
+  the all-to-all traffic the roofline's collective term sees.
+* Capacity overflow drops tokens (standard Switch behaviour); the residual
+  path carries them unchanged.  Tests check the no-drop regime exactly
+  against a dense per-token oracle.
+
+Covers both assigned MoE archs: llama4-scout (16e top-1) and granite-moe
+(32e top-8).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from .config import ModelConfig
+from .spec import ParamSpec
+
+
+def moe_spec(cfg: ModelConfig, layers: Optional[int] = None) -> Dict[str, ParamSpec]:
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    L = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "router": ParamSpec(L + (d, E), la + ("embed", "experts"), init_scale=0.02),
+        "w_gate": ParamSpec(L + (E, d, ff), la + ("experts", "embed", "ffn")),
+        "w_up": ParamSpec(L + (E, d, ff), la + ("experts", "embed", "ffn")),
+        "w_down": ParamSpec(L + (E, ff, d), la + ("experts", "ffn", "embed")),
+    }
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 (TPU sublane alignment)
+
+
+def _dispatch_one_group(
+    xf: jnp.ndarray,  # (Tg, d) — one group's tokens
+    router: jnp.ndarray,  # (d, E)
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    cfg: ModelConfig,
+    C: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch + expert SwiGLU + combine for one token group;
+    vmapped over groups by :func:`moe_block`."""
+    T, d = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("td,de->te", xf, router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(logits, k)  # (Tg, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+
+    # Load-balancing auxiliary loss (Switch Transformer eq. 4), per group.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    N = T * k
+    flat_e = sel.reshape(N)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = jnp.take(flat_e, sort_idx)
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(N) - jnp.take(starts, sorted_e)
+    keep = pos_in_e < C
+    buf_slot = jnp.where(keep, sorted_e * C + pos_in_e, N + E * C)  # OOB drop
+    tok_of_sorted = sort_idx // k
+
+    x_sorted = jnp.take(xf, tok_of_sorted, axis=0)  # (N, d) local gather
+    buf = jnp.zeros((E * C, d), xf.dtype)
+    buf = buf.at[buf_slot].set(x_sorted, mode="drop").reshape(E, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down)
+    y = y.reshape(E * C, d)
+
+    y_sorted = jnp.take(y, jnp.clip(buf_slot, 0, E * C - 1), axis=0)
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    y_assign = jnp.zeros((N, d), xf.dtype).at[sort_idx].set(y_sorted)
+    y_assign = y_assign.reshape(T, k, d)
+    out = jnp.sum(gates[..., None].astype(xf.dtype) * y_assign, axis=1)
+    return out, aux
+
+
+def moe_block(
+    x: jnp.ndarray,  # (B, S, d)
+    p: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss scalar fp32).
+
+    ``cfg.moe_groups`` (G) splits tokens into independently-dispatched groups
+    with per-group capacity (GShard semantics); at scale G = the data degree
+    so group boundaries coincide with shards.  The group loop is vmapped and
+    only the group axis is sharding-constrained — §Perf cell 1 measured three
+    lowerings of the same math:
+
+    * G=1 global dispatch:        X = 266 s (gathers replicate across data)
+    * vmap + group constraint:    X = 20.8 s    <-- this implementation
+    * explicit batched scatter +
+      full internal constraints:  X = 187 s (2-D-sharded scatter replicates)
+    """
+    B, S, d = x.shape
+    T = B * S
+    G = max(1, cfg.moe_groups)
+    if T % G:
+        raise ValueError(f"tokens {T} must divide moe_groups {G}")
+    Tg = T // G
+    C = capacity(Tg, cfg)
+    xg = constrain(x.reshape(G, Tg, d), ("moe_capacity", None, "act_embed"))
+
+    out, aux = jax.vmap(
+        lambda one: _dispatch_one_group(
+            one, p["router"], p["w_gate"], p["w_up"], p["w_down"], cfg, C
+        )
+    )(xg)
+    out = constrain(out, ("moe_capacity", None, "act_embed"))
+    return out.reshape(B, S, d), jnp.mean(aux)
+
+
+def moe_block_dense_oracle(
+    x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> jnp.ndarray:
+    """O(T·E·d·ff) dense oracle: every expert on every token, combined by the
+    same top-k gates.  Used by tests in the no-drop regime."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    gate_vals, sel = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    g = jnp.einsum("td,edf->tef", xf, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", xf, p["w_up"])
+    y_all = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, p["w_down"])
+    mask = jax.nn.one_hot(sel, E, dtype=jnp.float32)  # (T, k, E)
+    comb = jnp.einsum("tke,tk->te", mask, gates)
+    out = jnp.einsum("te,ted->td", comb.astype(x.dtype), y_all)
+    return out.reshape(B, S, d)

@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (Griffin §2.4, c = 8)::
+
+    r_t = σ(W_a x_t + b_a)                 recurrence gate
+    i_t = σ(W_x x_t + b_x)                 input gate
+    log a_t = -c · r_t · softplus(-Λ)      (a = σ(Λ)^(c·r_t), σ(Λ)∈[0.9,0.999])
+    h_t = a_t ⊙ h_{t-1} + √(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The residual block is: RMSNorm → {conv1d(4) → RG-LRU} ⊙ GeLU(gate branch) →
+out-proj, as in RecurrentGemma.  O(1) decode state ⇒ long_500k-eligible.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .spec import ParamSpec
+
+C_FACTOR = 8.0
+
+
+def rglru_spec(cfg: ModelConfig, layers: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d, w, K = cfg.d_model, cfg.lru_width_, cfg.d_conv
+    L = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "in_x": ParamSpec(L + (d, w), la + ("embed", "rnn")),
+        "in_gate": ParamSpec(L + (d, w), la + ("embed", "rnn")),
+        "conv_w": ParamSpec(L + (K, w), la + ("conv", "rnn")),
+        "conv_b": ParamSpec(L + (w,), la + ("rnn",), init="zeros"),
+        "wa": ParamSpec(L + (w, w), la + ("rnn", "rnn")),
+        "ba": ParamSpec(L + (w,), la + ("rnn",), init="zeros"),
+        "wx": ParamSpec(L + (w, w), la + ("rnn", "rnn")),
+        "bx": ParamSpec(L + (w,), la + ("rnn",), init="zeros"),
+        "lam": ParamSpec(L + (w,), la + ("rnn",), init="rglru_lambda"),
+        "out": ParamSpec(L + (w, d), la + ("rnn", "embed")),
+    }
+
+
+def _rglru_gates(
+    x: jnp.ndarray, p: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", x, p["wa"]).astype(jnp.float32) + p["ba"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", x, p["wx"]).astype(jnp.float32) + p["bx"]
+    )
+    return r, i
+
+
+def rglru_block(
+    x: jnp.ndarray,  # (B, S, d)
+    p: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    from .ssm import _causal_conv1d  # same depthwise causal conv
+
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["in_gate"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    xs = _causal_conv1d(xs, p["conv_w"], p["conv_b"])
+
+    softplus_neg_lam = jax.nn.softplus(-p["lam"].astype(jnp.float32))  # (w,)
+
+    def step(h, inputs):
+        x_t, r_t, i_t = inputs  # (B, w) each
+        log_a = -C_FACTOR * r_t * softplus_neg_lam
+        a = jnp.exp(log_a)
+        gated = i_t * x_t.astype(jnp.float32)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+        return h, h.astype(x_t.dtype)
+
+    r, i = _rglru_gates(xs, p)  # (B,S,w) fp32
+    h0 = jnp.zeros((x.shape[0], cfg.lru_width_), jnp.float32)
+    _, hs = lax.scan(
+        step,
+        h0,
+        (xs.transpose(1, 0, 2), r.transpose(1, 0, 2), i.transpose(1, 0, 2)),
+    )
+    y = hs.transpose(1, 0, 2)  # (B,S,w)
+    y = y * gate
+    return jnp.einsum("bsw,wd->bsd", y, p["out"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.lru_width_), jnp.bfloat16),
+        "h": jnp.zeros((batch, cfg.lru_width_), jnp.float32),
+    }
+
+
+def rglru_decode_step(
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: Dict[str, jnp.ndarray],
+    p: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["in_gate"]).astype(jnp.float32)
+    ).astype(x.dtype)[:, 0]
+    xs = jnp.einsum("bsd,dw->bsw", x, p["in_x"])[:, 0]  # (B, w)
+    window = jnp.concatenate([cache["conv"].astype(xs.dtype), xs[:, None, :]], axis=1)
+    xc = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+
+    r, i = _rglru_gates(xc, p)
+    log_a = -C_FACTOR * r * jax.nn.softplus(-p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xc.astype(jnp.float32)
+    )
+    y = h.astype(x.dtype) * gate
+    out = jnp.einsum("bw,wd->bd", y, p["out"])[:, None, :]
+    return out, {"conv": window[:, 1:, :].astype(jnp.bfloat16), "h": h}

@@ -1,0 +1,107 @@
+"""Parameter-spec plumbing: shapes + logical axis names, no allocation.
+
+Every model in the zoo describes its parameters as a pytree of
+:class:`ParamSpec` — shape, dtype, and **logical axis names**.  Three
+consumers:
+
+* smoke tests materialize real arrays (:func:`init_params`),
+* the dry-run converts specs to ``jax.ShapeDtypeStruct`` + shardings
+  (:func:`as_shape_dtype_structs`) so a 405B model "exists" without a byte
+  allocated,
+* the sharding layer maps logical names to mesh axes
+  (:mod:`repro.distributed.sharding`) — the mapping itself is a tunable PP.
+
+Logical axis vocabulary (shared across all 10 architectures):
+    ``layers``    stacked scan-over-layers axis (never sharded)
+    ``vocab``     vocabulary
+    ``embed``     d_model
+    ``q_heads``   query heads
+    ``kv_heads``  KV heads (GQA)
+    ``head_dim``  per-head dim
+    ``ffn``       MLP hidden
+    ``experts``   MoE expert axis
+    ``rnn``       recurrent width (RG-LRU / Mamba d_inner)
+    ``state``     SSM state dim
+    ``conv``      conv kernel taps
+    ``frames``    audio/vision frontend positions
+    ``None``      never sharded
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "rglru_lambda"
+    init_scale: Optional[float] = None  # overrides fan-in scaling
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(
+                f"shape {self.shape} vs logical_axes {self.logical_axes} length mismatch"
+            )
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec_leaf(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Any) -> Any:
+    return jax.tree.map(fn, tree, is_leaf=is_spec_leaf)
+
+
+def count_params(tree: Any, exclude: Sequence[str] = ()) -> int:
+    total = 0
+    for spec in jax.tree.leaves(tree, is_leaf=is_spec_leaf):
+        if isinstance(spec, ParamSpec):
+            total += spec.size
+    return total
+
+
+def as_shape_dtype_structs(tree: Any) -> Any:
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def init_params(key: jax.Array, tree: Any) -> Any:
+    """Materialize concrete parameters (smoke tests / examples only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec_leaf)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = []
+    for spec, k in zip(leaves, keys):
+        out.append(_init_leaf(k, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "rglru_lambda":
+        # RG-LRU Λ init: a = sigmoid(Λ) uniform in [0.9, 0.999] (Griffin §2.4)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(u / (1.0 - u)).astype(spec.dtype)
+    # fan-in scaled normal; fan-in = second-to-last dim for matrices
+    if spec.init_scale is not None:
+        scale = spec.init_scale
+    elif len(spec.shape) >= 2:
+        fan_in = spec.shape[-2]
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    else:
+        scale = 0.02
+    x = jax.random.normal(key, spec.shape, jnp.float32) * scale
+    return x.astype(spec.dtype)

@@ -1,0 +1,17 @@
+from .adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_init_specs,
+    adamw_update,
+    global_norm,
+    lr_at,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_init_specs",
+    "adamw_update",
+    "global_norm",
+    "lr_at",
+]

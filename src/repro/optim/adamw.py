@@ -1,0 +1,130 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and two
+distributed-optimization PPs:
+
+* ``moment_dtype`` — fp32 (default) or bf16 second moments ("gradient
+  compression" family; halves optimizer HBM, the fix that lets llama3-405b
+  train_4k approach one pod, DESIGN.md §6),
+* ZeRO-1 state sharding is *not* done here — it is purely a sharding-rule
+  concern (:func:`repro.distributed.sharding.opt_state_sharding`); the math
+  below is sharding-oblivious, pjit moves the bytes.
+
+Pure functions only; state is a pytree {m, v, count} matching params.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec, is_spec_leaf
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"  # "float32" | "bfloat16" (compression PP)
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = cfg.lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_init_specs(spec_tree: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    """Optimizer-state *specs* (for the dry-run: shapes, logical axes)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.logical_axes, dtype=mdt, init="zeros")
+
+    tree = jax.tree.map(one, spec_tree, is_leaf=is_spec_leaf)
+    return {
+        "m": tree,
+        "v": tree,
+        "count": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    grads: Any,
+    opt_state: Dict[str, Any],
+    params: Any,
+    cfg: AdamWConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (params, opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = lr_at(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step_ + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b_, cc = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b_)
+        new_v.append(cc)
+
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "count": count,
+        },
+        metrics,
+    )

@@ -1,0 +1,4 @@
+from .train import TrainLoopConfig, Trainer, SimulatedFailure
+from .serve import Server
+
+__all__ = ["TrainLoopConfig", "Trainer", "SimulatedFailure", "Server"]

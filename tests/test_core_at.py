@@ -1,0 +1,244 @@
+"""Unit + property tests for the AT framework (repro.core)."""
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ATRegion,
+    BasicParams,
+    CoordinateDescent,
+    DegreeController,
+    ExchangeVariant,
+    ExhaustiveSearch,
+    GKV_FIGURE_OF_VARIANT,
+    LoopNest,
+    ParamSpace,
+    PerfParam,
+    RuntimeSelector,
+    SuccessiveHalving,
+    Tuner,
+    TuningDB,
+    enumerate_exchange_variants,
+    pp_key,
+)
+
+
+# ---------------------------------------------------------------------------
+# BP / PP
+# ---------------------------------------------------------------------------
+
+
+def test_bp_fingerprint_stable_and_order_independent():
+    a = BasicParams.make(arch="x", n=16, mesh=(16, 16))
+    b = BasicParams.make(mesh=(16, 16), n=16, arch="x")
+    assert a.fingerprint() == b.fingerprint()
+    assert a["n"] == 16
+    c = BasicParams.make(arch="x", n=17, mesh=(16, 16))
+    assert a.fingerprint() != c.fingerprint()
+
+
+def test_param_space_enumeration_and_constraint():
+    space = ParamSpace(
+        [PerfParam("a", (1, 2, 4)), PerfParam("b", ("x", "y"))],
+        constraint=lambda p: not (p["a"] == 4 and p["b"] == "y"),
+    )
+    pts = list(space.points())
+    assert len(pts) == 5  # 6 - 1 infeasible
+    assert space.size() == 6
+    for p in pts:
+        space.validate(p)
+    with pytest.raises(ValueError):
+        space.validate({"a": 3, "b": "x"})
+
+
+def test_param_space_rejects_duplicates():
+    with pytest.raises(ValueError):
+        PerfParam("a", (1, 1))
+    with pytest.raises(ValueError):
+        ParamSpace([PerfParam("a", (1,)), PerfParam("a", (2,))])
+
+
+# ---------------------------------------------------------------------------
+# Exchange variant enumeration — N(N+1)/2, paper's 10 for N=4
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=6))
+def test_variant_count_formula(n):
+    vs = enumerate_exchange_variants(n)
+    assert len(vs) == n * (n + 1) // 2
+    assert len({(v.m, v.j) for v in vs}) == len(vs)
+
+
+def test_paper_figure_mapping_complete():
+    vs = enumerate_exchange_variants(4)
+    assert len(vs) == 10
+    assert {(v.m, v.j) for v in vs} == set(GKV_FIGURE_OF_VARIANT)
+
+
+# ---------------------------------------------------------------------------
+# LoopNest: every (variant × degree) is semantics-preserving (property)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dims=st.lists(st.integers(min_value=1, max_value=7), min_size=1, max_size=4),
+    degree=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**30),
+)
+def test_all_variants_allclose_to_reference(dims, degree, seed):
+    nest = LoopNest(
+        "t", [(f"d{i}", n) for i, n in enumerate(dims)], lambda x: x * 2.0 + 1.0
+    )
+    x = jax.random.normal(jax.random.PRNGKey(seed), tuple(dims), jnp.float32)
+    ref = nest.reference(x)
+    for v in enumerate_exchange_variants(len(dims)):
+        out = nest.variant_fn(v, degree)(x)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+        assert out.shape == x.shape
+
+
+def test_variant_labels():
+    v = ExchangeVariant(m=3, j=1)
+    assert v.label(("iv", "iz", "mx", "my")) == "OMP[iv]>iz>mx_my"
+    with pytest.raises(ValueError):
+        ExchangeVariant(m=2, j=3)
+
+
+# ---------------------------------------------------------------------------
+# Tuner: argmin correctness (property) + DB persistence + resume
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    costs=st.lists(
+        st.floats(min_value=0.01, max_value=100, allow_nan=False), min_size=2,
+        max_size=12, unique=True,
+    )
+)
+def test_tuner_finds_argmin(costs):
+    space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+    region = ATRegion("r", space, lambda p: (lambda: p["i"]))
+    tuner = Tuner(TuningDB())
+    bp = BasicParams.make(arch="t")
+    res = tuner.tune(region, bp, lambda p: costs[p["i"]])
+    assert res.best.point["i"] == int(np.argmin(costs))
+    assert region.selected == res.best.point
+
+
+def test_tuner_db_roundtrip_and_resume(tmp_path):
+    path = str(tmp_path / "db.json")
+    space = ParamSpace([PerfParam("i", (0, 1, 2, 3))])
+    region = ATRegion("r", space, lambda p: (lambda: p["i"]))
+    calls = []
+
+    def cost(p):
+        calls.append(p["i"])
+        return float(p["i"] != 2)
+
+    t1 = Tuner(TuningDB(path))
+    t1.tune(region, BasicParams.make(arch="t"), cost)
+    assert len(calls) == 4
+    # resume: a new tuner over the same DB re-uses recorded trials
+    t2 = Tuner(TuningDB(path))
+    res = t2.tune(region, BasicParams.make(arch="t"), cost)
+    assert len(calls) == 4  # no new evaluations
+    assert res.best.point == {"i": 2}
+    # persisted best is readable directly
+    db = TuningDB(path)
+    assert db.best_point(BasicParams.make(arch="t")) == {"i": 2}
+
+
+def test_db_atomic_write(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path)
+    bp = BasicParams.make(arch="t")
+    db.record_trial(bp, {"i": 0}, 1.0, "install")
+    with open(path) as f:
+        data = json.load(f)
+    assert bp.fingerprint() in data
+
+
+# ---------------------------------------------------------------------------
+# Searches
+# ---------------------------------------------------------------------------
+
+
+def _quad_cost(p):
+    return (p["a"] - 3) ** 2 + (p["b"] - 5) ** 2 + 1.0
+
+
+def test_coordinate_descent_on_separable_cost():
+    space = ParamSpace(
+        [PerfParam("a", tuple(range(8))), PerfParam("b", tuple(range(8)))]
+    )
+    res = CoordinateDescent().run(space, _quad_cost)
+    assert res.best.point == {"a": 3, "b": 5}
+    assert res.evaluations < space.size()  # cheaper than exhaustive
+
+
+def test_successive_halving():
+    space = ParamSpace([PerfParam("i", tuple(range(16)))])
+    res = SuccessiveHalving(initial_budget=1).run(
+        space, lambda p, budget: abs(p["i"] - 7) + 1.0 / budget
+    )
+    assert res.best.point["i"] == 7
+
+
+# ---------------------------------------------------------------------------
+# Degree controller (omp_set_num_threads semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_degree_controller_set_restore():
+    ctl = DegreeController(max_degree=32)
+    ctl.set_tuned("k1", 4)
+    assert ctl.current == 32
+    with ctl.region("k1") as d:
+        assert d == 4 and ctl.current == 4
+        with ctl.region("unknown") as d2:  # untuned: stays at max
+            assert d2 == 32
+    assert ctl.current == 32
+    with pytest.raises(ValueError):
+        ctl.set_tuned("k1", 64)
+
+
+# ---------------------------------------------------------------------------
+# Run-time layer: straggler-triggered re-selection among precompiled
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_selector_switches_on_regression():
+    space = ParamSpace([PerfParam("i", (0, 1))])
+    region = ATRegion("r", space, lambda p: (lambda: p["i"]))
+    db = TuningDB()
+    bp = BasicParams.make(arch="t")
+    Tuner(db).tune(region, bp, lambda p: [1.0, 2.0][p["i"]])
+    assert region.selected == {"i": 0}
+    sel = RuntimeSelector(region, bp, db, tolerance=1.5, window=4)
+    for _ in range(4):
+        switched = sel.observe(10.0)  # 10x regression vs tuned 1.0
+    assert switched and region.selected == {"i": 1} and sel.switches == 1
+
+
+# ---------------------------------------------------------------------------
+# Precompile: AOT candidates, zero-compile switching
+# ---------------------------------------------------------------------------
+
+
+def test_region_precompile_and_dispatch():
+    space = ParamSpace([PerfParam("s", (1.0, 2.0, 3.0))])
+    region = ATRegion("r", space, lambda p: (lambda x: x * p["s"]))
+    x = jnp.ones((4,))
+    n = region.precompile([x])
+    assert n == 3 and region.compiled_points() == 3
+    region.select({"s": 2.0})
+    np.testing.assert_allclose(region(x), 2.0 * np.ones(4))

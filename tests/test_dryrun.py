@@ -1,0 +1,32 @@
+"""End-to-end dry-run test: one real cell through the production-mesh
+lower+compile pipeline in a subprocess (so the 512-device XLA flag never
+leaks into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh_flag", [[], ["--multi-pod"]])
+def test_dryrun_single_cell(tmp_path, mesh_flag):
+    out = str(tmp_path / "cell.jsonl")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-0.6b", "--shape", "decode_32k", "--out", out]
+        + mesh_flag,
+        env=env, capture_output=True, text=True, timeout=560, cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads(open(out).readline())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == (512 if mesh_flag else 256)
+    r = rec["roofline"]
+    assert r["compute_s"] > 0 and r["memory_s"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory"]["per_device_total"] > 0
+    assert 0 < rec["useful_flops_ratio"] < 10

@@ -1,0 +1,36 @@
+"""MODEL_FLOPS accounting sanity: analytic_step_flops across the pool."""
+import pytest
+
+from repro.configs import ARCH_IDS, cells_for, get_config
+from repro.models import analytic_param_count, analytic_step_flops
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_step_flops_positive_and_ordered(arch):
+    cfg = get_config(arch)
+    for cell in cells_for(arch):
+        f = analytic_step_flops(cfg, cell.kind, cell.global_batch, cell.seq_len)
+        assert f > 0
+        if cell.kind == "train":
+            fwd = analytic_step_flops(cfg, "prefill", cell.global_batch, cell.seq_len)
+            assert f > fwd  # train = fwd + bwd must exceed fwd alone
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_flops_at_least_6nd(arch):
+    """Weight term 6·N_active·D is a floor; attention/scan terms only add."""
+    cfg = get_config(arch)
+    B, S = 256, 4096
+    f = analytic_step_flops(cfg, "train", B, S)
+    floor = 6.0 * analytic_param_count(cfg, active_only=True) * B * S
+    assert f >= floor * 0.999
+
+
+def test_attention_dominates_at_long_context():
+    """At 32k, attention flops must exceed the weight flops for a small
+    dense model — the reason 6·N·D alone was replaced (EXPERIMENTS §Roofline)."""
+    cfg = get_config("qwen3-0.6b")
+    B, S = 32, 32768
+    total = analytic_step_flops(cfg, "prefill", B, S)
+    weights = 2.0 * analytic_param_count(cfg, active_only=True) * B * S
+    assert total > 2.0 * weights

@@ -1,0 +1,165 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.exb import ops as exb_ops, ref as exb_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rglru_scan import ops as rg_ops, ref as rg_ref
+from repro.kernels.ssm_scan import ops as ssm_ops, ref as ssm_ref
+from repro.kernels.stress import ops as st_ops, ref as st_ref
+
+
+# ---------------------------------------------------------------------------
+# exb (GKV)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims", [(4, 4, 16, 9), (2, 8, 8, 5), (8, 2, 4, 16)])
+@pytest.mark.parametrize("blocks", [(1, 1), (2, 2), (1, 2)])
+def test_exb_shapes(dims, blocks):
+    key = jax.random.PRNGKey(0)
+    inp = exb_ref.make_inputs(key, dims=dims)
+    o_re, o_im = exb_ref.exb_ref(inp)
+    biv, biz = blocks
+    if dims[0] % biv or dims[1] % biz:
+        pytest.skip("indivisible")
+    r, i = exb_ops.exb(inp, block_iv=biv, block_iz=biz)
+    np.testing.assert_allclose(r, o_re, rtol=1e-4, atol=1e-8)
+    np.testing.assert_allclose(i, o_im, rtol=1e-4, atol=1e-8)
+
+
+def test_exb_vmem_constraint_prunes():
+    region = exb_ops.exb_region(dims=(16, 16, 128, 65), vmem_budget=4 * 2**20)
+    pts = list(region.space.points())
+    assert 0 < len(pts) < region.space.size()
+    for p in pts:
+        assert exb_ops.vmem_bytes(p["block_iv"], p["block_iz"]) <= 4 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# stress (Seism3D)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims", [(8, 8, 16), (4, 16, 8)])
+@pytest.mark.parametrize("blocks", [(1, 4), (4, 4), (2, 16)])
+def test_stress_shapes(dims, blocks):
+    bk, bj = blocks
+    if dims[0] % bk or dims[1] % bj:
+        pytest.skip("indivisible")
+    key = jax.random.PRNGKey(0)
+    inp = st_ref.make_inputs(key, dims=dims)
+    ref = st_ref.stress_ref(inp)
+    out = st_ops.stress(inp, block_k=bk, block_j=bj)
+    for k in ref:
+        np.testing.assert_allclose(out[k], ref[k], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — hypothesis sweep over shapes/dtypes/blocks
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    nkv_heads=st.integers(1, 2),
+    g=st.integers(1, 3),
+    log_s=st.integers(5, 7),
+    hd=st.sampled_from([8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_property(b, nkv_heads, g, log_s, hd, dtype, seed):
+    S = 2**log_s
+    H = nkv_heads * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, S, nkv_heads, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, S, nkv_heads, hd), jnp.float32).astype(dtype)
+    o = fa_ops.attention(q, k, v, block_q=32, block_kv=32)
+    o_ref = fa_ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_matches_xla_flash():
+    """Pallas kernel ≡ the XLA flash path used by the models."""
+    from repro.models.attention import flash_attention_xla
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 16), jnp.float32)
+    o_pl = fa_ops.attention(q, k, v, block_q=64, block_kv=64)
+    o_xla = flash_attention_xla(q, k, v, 64, 64)
+    np.testing.assert_allclose(o_pl, o_xla, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan — property: kernel ≡ sequential oracle for random chunkings
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    log_s=st.integers(4, 6),
+    d=st.sampled_from([16, 32]),
+    n=st.sampled_from([4, 8]),
+    chunk_div=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 100),
+)
+def test_ssm_scan_property(b, log_s, d, n, chunk_div, seed):
+    S = 2**log_s
+    x, dt, A, Bc, Cc, D = ssm_ref.make_inputs(
+        jax.random.PRNGKey(seed), B=b, S=S, D=d, N=n
+    )
+    y_ref = ssm_ref.ssm_scan_ref(x, dt, A, Bc, Cc, D)
+    y = ssm_ops.scan(x, dt, A, Bc, Cc, D, block_d=d, chunk=S // chunk_div)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_state_continuity_across_chunks():
+    """Chunked kernel must carry h across chunk boundaries exactly — compare
+    chunk=S (single) vs chunk=S/4 on inputs with long-range decay."""
+    x, dt, A, Bc, Cc, D = ssm_ref.make_inputs(jax.random.PRNGKey(7), B=1, S=64, D=16, N=4)
+    dt = dt * 0.01  # slow decay -> state carries far
+    y1 = ssm_ops.scan(x, dt, A, Bc, Cc, D, block_d=16, chunk=64)
+    y2 = ssm_ops.scan(x, dt, A, Bc, Cc, D, block_d=16, chunk=16)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    log_s=st.integers(4, 6),
+    w=st.sampled_from([16, 32]),
+    chunk_div=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 100),
+)
+def test_rglru_scan_property(b, log_s, w, chunk_div, seed):
+    S = 2**log_s
+    x, r, i, lam = rg_ref.make_inputs(jax.random.PRNGKey(seed), B=b, S=S, W=w)
+    y_ref = rg_ref.rglru_scan_ref(x, r, i, lam)
+    y = rg_ops.scan(x, r, i, lam, block_w=w, chunk=S // chunk_div)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_stability_bound():
+    """|h_t| stays bounded when a∈(0,1) and inputs bounded (Griffin's
+    sqrt(1-a²) normalization) — property of the kernel math."""
+    x, r, i, lam = rg_ref.make_inputs(jax.random.PRNGKey(9), B=1, S=256, W=8)
+    x = jnp.clip(x, -1, 1)
+    y = rg_ops.scan(x, r, i, lam, block_w=8, chunk=64)
+    assert float(jnp.max(jnp.abs(y))) < 10.0

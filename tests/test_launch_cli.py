@@ -1,0 +1,52 @@
+"""Subprocess smoke tests for the launch CLIs (dryrun is covered in
+test_dryrun.py; here: tune_cell's tuner-driven before-execution AT and the
+train/serve entry points)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def _run(args, timeout=560):
+    return subprocess.run(
+        [sys.executable, "-m"] + args, env=ENV, capture_output=True,
+        text=True, timeout=timeout, cwd=ROOT,
+    )
+
+
+def test_tune_cell_selects_kvseq_for_decode(tmp_path):
+    """The FIBER tuner must discover the KV-length sharding rule on a decode
+    cell (EXPERIMENTS.md §Perf cell 5) — end-to-end through lower+compile."""
+    db = str(tmp_path / "db.json")
+    proc = _run(
+        ["repro.launch.tune_cell", "--arch", "qwen3-0.6b",
+         "--shape", "decode_32k", "--db", db]
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "best PP" in proc.stdout
+    assert "'rule': 'tp_kvseq'" in proc.stdout
+    data = json.load(open(db))
+    assert len(data) == 1  # one BP entry persisted
+
+
+def test_train_cli_runs():
+    proc = _run(
+        ["repro.launch.train", "--arch", "tinyllama-1.1b", "--steps", "3",
+         "--batch", "2", "--seq", "32"]
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "final loss" in proc.stdout
+
+
+def test_serve_cli_runs():
+    proc = _run(
+        ["repro.launch.serve", "--arch", "qwen3-0.6b", "--requests", "2",
+         "--prompt-len", "8", "--new-tokens", "4"]
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "served 2 requests" in proc.stdout

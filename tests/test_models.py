@@ -1,0 +1,206 @@
+"""Per-arch smoke tests (reduced configs) + model-level unit/property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, cells_for, get_config, skipped_cells
+from repro.models import (
+    analytic_param_count,
+    count_params,
+    decode_fn,
+    init_params,
+    make_concrete_batch,
+    param_specs,
+    prefill_fn,
+    train_loss,
+)
+from repro.models.layers import mrope_apply, rope_apply
+from repro.models.moe import moe_block, moe_block_dense_oracle, moe_spec
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# The assigned-architecture smoke tests: one fwd/train step on CPU,
+# asserting output shapes + no NaNs (assignment requirement).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(KEY, param_specs(cfg))
+    batch = make_concrete_batch(KEY, cfg, "train", global_batch=2, seq_len=32)
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: train_loss(p, batch["batch"], cfg))
+    )(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(KEY, param_specs(cfg))
+    pb = make_concrete_batch(KEY, cfg, "prefill", global_batch=2, seq_len=32)
+    logits, cache = jax.jit(lambda p, b: prefill_fn(p, b, cfg))(params, pb["batch"])
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), arch
+    db = make_concrete_batch(KEY, cfg, "decode", global_batch=2, seq_len=32)
+    dlogits, cache2 = jax.jit(lambda p, b, c: decode_fn(p, b, c, cfg))(
+        params, db["batch"], cache
+    )
+    assert dlogits.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(dlogits).all(), arch
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+
+def test_cell_accounting_covers_assignment():
+    """10 archs × 4 shapes = 40 assigned cells: runnable + skipped = 40."""
+    runnable = sum(len(cells_for(a)) for a in ARCH_IDS)
+    skipped = len(skipped_cells())
+    assert runnable + skipped == 40
+    assert skipped == 8  # long_500k for the 8 full-attention archs
+
+
+# ---------------------------------------------------------------------------
+# Decode ≡ prefill consistency: prefill(t_1..t_n) then decode(t_{n+1})
+# must equal prefill(t_1..t_{n+1}) logits.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["tinyllama-1.1b", "falcon-mamba-7b", "recurrentgemma-2b",
+             "granite-moe-1b-a400m", "whisper-large-v3", "qwen2-vl-2b",
+             "llama4-scout-17b-a16e", "qwen3-0.6b"]
+)
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(KEY, param_specs(cfg))
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size - 1, jnp.int32)
+    extra = {}
+    if cfg.is_encoder_decoder:
+        extra["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_len, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+
+    full_logits, _ = prefill_fn(params, {"tokens": toks, **extra}, cfg)
+    short_logits, cache = prefill_fn(
+        params, {"tokens": toks[:, :S], **extra}, cfg
+    )
+    # grow attention caches by one slot for the incoming token
+    cache = _grow(cache, 1)
+    step_logits, _ = decode_fn(params, {"tokens": toks[:, S:]}, cache, cfg)
+    # bf16 params: the decode path computes the conv/attention in a different
+    # association order than prefill (einsum-over-window vs shifted adds), so
+    # agreement is to bf16 accumulation noise, not exact.
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits), rtol=0.1, atol=0.08
+    )
+
+
+def _grow(cache, extra):
+    """Grow LINEAR attention caches by one slot for the incoming token.
+    Hybrid ``b*_k``/``t*_k`` caches are ring buffers of exactly ``window``
+    slots — growing them would corrupt the ring indexing, so only the
+    dense/moe/whisper self-attention caches (exact keys) are padded."""
+    out = {}
+    for k, v in cache.items():
+        if k in ("k", "v", "self_k", "self_v"):
+            pad = [(0, 0)] * v.ndim
+            pad[-3] = (0, extra)
+            out[k] = jnp.pad(v, pad)
+        else:
+            out[k] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic vs instantiated parameter counts (smoke configs, exact)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_analytic_param_count_matches_specs(arch):
+    cfg = get_config(arch, smoke=True)
+    analytic = analytic_param_count(cfg)
+    actual = count_params(param_specs(cfg))
+    assert abs(analytic - actual) / actual < 0.02, (arch, analytic, actual)
+
+
+# ---------------------------------------------------------------------------
+# RoPE properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), shift=st.integers(0, 64))
+def test_rope_relativity(seed, shift):
+    """q·k after RoPE depends only on relative positions."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(ks[0], (1, 4, 1, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4, 1, 16), jnp.float32)
+    pos = jnp.arange(4)[None, :]
+    def scores(p):
+        qr = rope_apply(q, p, 10000.0)
+        kr = rope_apply(k, p, 10000.0)
+        return jnp.einsum("bqhd,bkhd->bqk", qr, kr)
+    np.testing.assert_allclose(
+        scores(pos), scores(pos + shift), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """With t=h=w position ids, M-RoPE ≡ standard RoPE (Qwen2-VL property)."""
+    q = jax.random.normal(KEY, (2, 8, 2, 32), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    pos3 = jnp.broadcast_to(pos, (3, 2, 8))
+    out_m = mrope_apply(q, pos3, 10000.0, (4, 6, 6))
+    out_s = rope_apply(q, pos, 10000.0)
+    np.testing.assert_allclose(out_m, out_s, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based dispatch ≡ dense oracle in the no-drop regime
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), topk=st.sampled_from([1, 2]))
+def test_moe_dispatch_matches_dense_oracle(seed, topk):
+    from repro.models.config import ModelConfig
+    from repro.models.spec import init_params as init_p
+
+    cfg = ModelConfig(
+        name="moe-test", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=1, d_ff=24, vocab_size=64, n_experts=4, top_k=topk,
+        capacity_factor=8.0,  # capacity >> tokens: nothing drops
+    )
+    p = init_p(jax.random.PRNGKey(seed), moe_spec(cfg))
+    p = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, 16), jnp.float32)
+    out, aux = moe_block(x, p, cfg)
+    ref = moe_block_dense_oracle(x, p, cfg)
+    np.testing.assert_allclose(out, ref, rtol=5e-3, atol=5e-3)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.0 and adversarially skewed routing, output
+    degrades gracefully (dropped tokens pass through residual as zeros)."""
+    from repro.models.config import ModelConfig
+    from repro.models.spec import init_params as init_p
+
+    cfg = ModelConfig(
+        name="moe-test", family="moe", n_layers=1, d_model=8, n_heads=2,
+        n_kv_heads=1, d_ff=16, vocab_size=64, n_experts=4, top_k=1,
+        capacity_factor=1.0,
+    )
+    p = init_p(KEY, moe_spec(cfg))
+    x = jnp.ones((1, 16, 8), jnp.bfloat16)  # identical tokens -> one expert
+    out, _ = moe_block(x, p, cfg)
+    assert jnp.isfinite(out.astype(jnp.float32)).all()
