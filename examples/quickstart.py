@@ -1,42 +1,50 @@
-"""Quickstart: bracket a loop nest as an AT region and tune it.
+"""Quickstart: call a Pallas kernel through the autotuned-op registry.
 
     PYTHONPATH=src python examples/quickstart.py
 
-This is the 30-line version of the paper's workflow: define the nest
-(the ``!oat$ install Exchange region start/end`` bracket), give the tuner a
-cost function, get back the argmin (variant × degree) — then call the region
-as an ordinary function.
+This is the 30-line version of the install-layer workflow: every kernel in
+`repro.kernels` registers itself with the process-wide registry, so one call
+to ``autotuned("flash_attention")`` performs the whole FIBER stack — shape
+class → TuningDB lookup → (on miss) search over the block-shape candidates →
+AOT-warm the top-k → dispatch.  The DB persists to disk, so the second run
+of this script performs zero cost evaluations.
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import BasicParams, LoopNest, Tuner, TuningDB, WallClockCost
+from repro.core import TuningDB, autotuned
+from repro.kernels.flash_attention.ref import attention_ref
 
-# 1. An elementwise 3-deep loop nest (a small stencil-free update).
-nest = LoopNest(
-    "demo",
-    dims=[("i", 8), ("j", 32), ("k", 64)],
-    body=lambda x: jnp.tanh(x) * 1.5 + 0.5,
+DB_PATH = os.path.join(tempfile.gettempdir(), "quickstart_registry_db.json")
+
+# 1. Inputs: a small causal-GQA attention call (B, S, H, hd).
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (1, 256, 2, 16), jnp.float32)
+k = jax.random.normal(ks[1], (1, 256, 1, 16), jnp.float32)
+v = jax.random.normal(ks[2], (1, 256, 1, 16), jnp.float32)
+
+# 2. The registry front door: look up / tune / warm / dispatch in one call.
+op = autotuned("flash_attention", db=TuningDB(DB_PATH), top_k=2)
+out = op(q, k, v)
+
+state = op.resolve(q, k, v)
+print(f"shape class: {state.bp}")
+print(f"candidates:  {state.region.space.size()} "
+      f"(cost evaluations this run: {state.cost_evaluations})")
+print(f"selected:    {state.region.selected}  "
+      f"(warmed {state.region.compiled_points()} candidates, db={DB_PATH})")
+
+# 3. Verified against the pure-jnp oracle.
+np.testing.assert_allclose(
+    np.asarray(out), np.asarray(attention_ref(q, k, v)), rtol=2e-4, atol=2e-4
 )
-region = nest.at_region(degrees=(1, 4, 16))
+print("autotuned kernel output verified against oracle ✓")
 
-# 2. Inputs + oracle.
-x = jax.random.normal(jax.random.PRNGKey(0), (8, 32, 64), jnp.float32)
-print("candidates:", region.space.size())
-
-# 3. FIBER before-execution AT: measure every candidate, persist, select.
-cost = WallClockCost(build=lambda p: (lambda f=jax.jit(region.instantiate(p)): f(x)))
-result = Tuner(TuningDB("/tmp/quickstart_db.json")).tune(
-    region, BasicParams.make(arch="demo", shape=x.shape), cost
-)
-print(f"best point: {result.best.point}  ({result.best.cost * 1e6:.1f} us)")
-
-# 4. The region now dispatches the tuned candidate.
-out = region(x)
-assert jnp.allclose(out, nest.reference(x), rtol=1e-4, atol=1e-6)
-print("tuned region output verified against oracle ✓")
+# 4. Re-run this script: the DB hit makes tuning free (cost_evaluations=0).

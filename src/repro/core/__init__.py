@@ -14,6 +14,10 @@ Public API:
   — the three-layer tuner.
 * cost functions in :mod:`repro.core.cost`; searches in :mod:`repro.core.search`;
   persistence in :mod:`repro.core.db`.
+* :func:`~repro.core.registry.autotuned` /
+  :class:`~repro.core.registry.KernelSpec` /
+  :class:`~repro.core.autotuned.AutotunedOp` — the process-wide autotuned-op
+  registry with a persistent cross-run cache (docs/registry.md).
 """
 from .cost import (
     FX100,
@@ -35,8 +39,18 @@ from .exchange import (
     LoopNest,
     enumerate_exchange_variants,
 )
+from .autotuned import AutotunedOp, OpState
 from .params import BasicParams, ParamSpace, PerfParam, pp_key
 from .region import ATRegion
+from .registry import (
+    REGISTRY,
+    KernelSpec,
+    Registry,
+    autotuned,
+    get_kernel,
+    kernel_names,
+    register_kernel,
+)
 from .search import (
     CoordinateDescent,
     ExhaustiveSearch,
@@ -47,6 +61,15 @@ from .search import (
 from .tuner import Tuner, RuntimeSelector
 
 __all__ = [
+    "AutotunedOp",
+    "OpState",
+    "KernelSpec",
+    "Registry",
+    "REGISTRY",
+    "autotuned",
+    "get_kernel",
+    "kernel_names",
+    "register_kernel",
     "BasicParams",
     "ParamSpace",
     "PerfParam",

@@ -1,0 +1,221 @@
+"""AutotunedOp — registry-backed dispatch for one tunable op.
+
+The life of a call ``autotuned("flash_attention")(q, k, v)``:
+
+1. **shape class** — ``spec.shape_class(*args)`` buckets the call into a
+   :class:`~repro.core.params.BasicParams` (the DB key).
+2. **lookup** — an in-process state cache, then the TuningDB.  Either hit
+   means *zero* cost-function evaluations (the acceptance bar: a second call
+   for the same shape class never re-tunes, even in a fresh process reading
+   the same DB file).
+3. **tune on miss** — the configured :class:`~repro.core.search.Search`
+   under ``trial_budget`` evaluations; every trial lands in the DB, so an
+   interrupted sweep resumes where it stopped.
+4. **top-k AOT warm** — the k best candidates are materialized through
+   ``region.candidate`` (compiling them for this shape class), so run-time
+   switching is a dict lookup — ppOpen-AT's free ``omp_set_num_threads``
+   switch, generalized.
+5. **run-time layer** — a :class:`~repro.core.tuner.RuntimeSelector` watches
+   measured call times and demotes a regressing candidate to the next-best
+   *precompiled* one.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+import jax
+
+from .db import TuningDB
+from .params import BasicParams
+from .region import ATRegion
+from .registry import KernelSpec
+from .search import Search
+from .tuner import RuntimeSelector, Tuner
+
+
+class TrialBudgetExhausted(Exception):
+    """Raised internally when a search hits its evaluation budget."""
+
+
+@dataclass
+class OpState:
+    """Everything the op holds for one shape class."""
+
+    bp: BasicParams
+    region: ATRegion
+    selector: Optional[RuntimeSelector] = None
+    tuned: bool = False           # did *this process* run cost evaluations?
+    from_cache: bool = False      # selection came from the DB, zero evals
+    cost_evaluations: int = 0
+    warmed: int = 0
+
+
+class AutotunedOp:
+    """Callable dispatcher for one registered kernel.
+
+    ``monitor=True`` (default) blocks on the output and feeds the measured
+    wall time to the RuntimeSelector; latency-critical callers that do their
+    own timing (the train loop) pass ``monitor=False`` and call
+    ``state.selector.observe`` themselves.
+    """
+
+    def __init__(
+        self,
+        spec: KernelSpec,
+        registry=None,
+        db: Optional[TuningDB] = None,
+        search: Optional[Search] = None,
+        top_k: int = 2,
+        trial_budget: Optional[int] = None,
+        warm: bool = True,
+        tune: bool = True,
+        monitor: bool = True,
+        tolerance: float = 1.5,
+        window: int = 8,
+        cost_factory: Optional[Callable[..., Callable[[Mapping[str, Any]], float]]] = None,
+    ) -> None:
+        self.spec = spec
+        self._registry = registry
+        self._db = db
+        self.search = search
+        self.top_k = top_k
+        self.trial_budget = trial_budget
+        self.warm = warm
+        self.tune = tune
+        self.monitor = monitor
+        self.tolerance = tolerance
+        self.window = window
+        self.cost_factory = cost_factory or spec.cost_factory
+        self._states: Dict[str, OpState] = {}
+
+    # -- public --------------------------------------------------------------
+
+    @property
+    def db(self) -> TuningDB:
+        if self._db is None:
+            if self._registry is None:
+                self._db = TuningDB()
+            else:
+                self._db = self._registry.default_db()
+        return self._db
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        state = self.resolve(*args, **kwargs)
+        if not self.monitor or state.selector is None:
+            return state.region(*args, **kwargs)
+        t0 = time.perf_counter()
+        out = state.region(*args, **kwargs)
+        jax.block_until_ready(out)
+        state.selector.observe(time.perf_counter() - t0)
+        return out
+
+    def resolve(self, *args: Any, **kwargs: Any) -> OpState:
+        """The op's state for this call's shape class, tuning if needed."""
+        bp = self.spec.shape_class(*args, **kwargs)
+        fp = bp.fingerprint()
+        state = self._states.get(fp)
+        if state is not None:
+            return state
+        state = self._build_state(bp, args, kwargs)
+        self._states[fp] = state
+        return state
+
+    def select(self, point: Mapping[str, Any], *args: Any, **kwargs: Any) -> OpState:
+        """Pin a PP point for this shape class (bypasses tuning)."""
+        tune, self.tune = self.tune, False
+        try:
+            state = self.resolve(*args, **kwargs)
+        finally:
+            self.tune = tune
+        state.region.select(point)
+        return state
+
+    def states(self) -> Dict[str, OpState]:
+        return dict(self._states)
+
+    # -- internals -----------------------------------------------------------
+
+    def _build_state(self, bp: BasicParams, args: tuple, kwargs: dict) -> OpState:
+        region = self.spec.make_region(bp)
+        state = OpState(bp=bp, region=region)
+        tuned = self.db.tuned_point(bp)
+        if tuned is not None:
+            region.select(tuned)
+            state.from_cache = True
+        elif self.tune:
+            self._tune(state, args, kwargs)
+        if self.warm:
+            state.warmed = self._warm_topk(state, args, kwargs)
+        state.selector = RuntimeSelector(
+            region, bp, self.db, tolerance=self.tolerance, window=self.window
+        )
+        return state
+
+    def _tune(self, state: OpState, args: tuple, kwargs: dict) -> None:
+        region, bp = state.region, state.bp
+        if self.cost_factory is not None:
+            cost = self.cost_factory(region, bp, args, kwargs)
+        else:
+            cost = _wallclock_cost(region, args, kwargs)
+
+        def budgeted(point: Mapping[str, Any]) -> float:
+            if (
+                self.trial_budget is not None
+                and state.cost_evaluations >= self.trial_budget
+            ):
+                raise TrialBudgetExhausted(self.spec.name)
+            state.cost_evaluations += 1
+            return cost(point)
+
+        tuner = Tuner(self.db, self.search) if self.search else Tuner(self.db)
+        try:
+            tuner.tune(region, bp, budgeted)
+        except TrialBudgetExhausted:
+            # Budget hit mid-search: select the argmin over what we measured,
+            # but do NOT record a DB best — only a completed search is final,
+            # so the next run resumes from the recorded trials and keeps
+            # exploring instead of treating the interim winner as tuned.
+            trials = self.db.trials(bp)
+            if not trials:
+                raise ValueError(
+                    f"{self.spec.name}: trial_budget={self.trial_budget} "
+                    "allowed no evaluations"
+                ) from None
+            best_key = min(trials, key=trials.get)
+            region.select(json.loads(best_key))
+        state.tuned = True
+
+    def _warm_topk(self, state: OpState, args: tuple, kwargs: dict) -> int:
+        """Materialize the k best candidates so switching never compiles."""
+        ranked = sorted(self.db.trials(state.bp).items(), key=lambda kv: kv[1])
+        points: List[Dict[str, Any]] = [json.loads(k) for k, _ in ranked]
+        if not points:  # untuned (pinned selection): warm the live point only
+            points = [dict(state.region.selected)]
+        warmed = 0
+        for point in points[: max(1, self.top_k)]:
+            fn = state.region.candidate(point)  # caches into region._compiled
+            # the selected point is about to run for real — executing it here
+            # too would double the first call's latency for nothing
+            if (args or kwargs) and dict(point) != state.region.selected:
+                jax.block_until_ready(fn(*args, **kwargs))
+            warmed += 1
+        return warmed
+
+
+def _wallclock_cost(
+    region: ATRegion, args: tuple, kwargs: dict
+) -> Callable[[Mapping[str, Any]], float]:
+    """Default cost: compile (untimed), then time one steady-state call."""
+
+    def cost(point: Mapping[str, Any]) -> float:
+        fn = region.instantiate(point)  # NOT region.candidate: only the
+        # top-k winners should count as "precompiled" for the selector
+        jax.block_until_ready(fn(*args, **kwargs))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        return time.perf_counter() - t0
+
+    return cost

@@ -2,22 +2,32 @@
 
 FIBER's layered AT only works if results survive between layers: install-time
 results are consulted at before-execution time, before-execution results at
-run time.  ppOpen-AT persists them in generated source; we persist JSON.
+run time.  ppOpen-AT persists them in generated source; we persist JSON, so
+install-layer sweeps survive across *processes* — the registry's cross-run
+cache (docs/registry.md) is just a TuningDB with a path.
 
-Layout (one JSON file)::
+On-disk layout (schema v2)::
 
     {
-      "<bp_fingerprint>": {
-         "bp": {...},                      # human-readable BP echo
-         "layer": "before_execution",
-         "best": {"point": {...}, "cost": 1.2e-3},
-         "trials": {"<pp_key>": cost, ...},
-         "history": [...]                  # run-time layer observations
-      }, ...
+      "schema_version": 2,
+      "entries": {
+        "<bp_fingerprint>": {
+           "bp": {...},                      # human-readable BP echo
+           "layer": "before_execution",
+           "best": {"point": {...}, "cost": 1.2e-3},
+           "trials": {"<pp_key>": cost, ...},
+           "history": [...]                  # run-time layer observations
+        }, ...
+      }
     }
 
+Schema v1 (the seed format) was the bare ``entries`` mapping with no
+envelope; :meth:`TuningDB.load` still reads it.
+
 Writes are atomic (tmp + rename) so a crashed AT run never corrupts the DB —
-the same discipline the checkpointing layer uses.
+the same discipline the checkpointing layer uses.  Every flush first merges
+the on-disk state into the in-memory view, so concurrent writers (e.g. two
+install-layer sweeps over disjoint shape classes) union rather than clobber.
 """
 from __future__ import annotations
 
@@ -25,19 +35,56 @@ import json
 import os
 import tempfile
 import threading
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 from .params import BasicParams, pp_key
 
+SCHEMA_VERSION = 2
+
 
 class TuningDB:
+    SCHEMA_VERSION = SCHEMA_VERSION
+
     def __init__(self, path: Optional[str] = None) -> None:
         self.path = path
         self._lock = threading.Lock()
         self._data: Dict[str, Dict[str, Any]] = {}
+        self._disk_sig: Optional[Tuple[int, int]] = None
         if path and os.path.exists(path):
-            with open(path) as f:
-                self._data = json.load(f)
+            self._data = self._read_file(path)
+            self._disk_sig = self._file_sig(path)
+
+    # -- persistence ---------------------------------------------------------
+
+    @classmethod
+    def load(cls, path: str) -> "TuningDB":
+        """Open (or create) a DB bound to ``path``."""
+        return cls(path)
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Write the DB to ``path`` (defaults to the bound path) atomically.
+
+        Binds the DB to ``path`` for subsequent auto-flushes.
+        """
+        with self._lock:
+            if path is not None:
+                self.path = path
+            if not self.path:
+                raise ValueError("TuningDB.save() needs a path")
+            self._flush()
+            return self.path
+
+    def merge(self, other: "TuningDB | Mapping[str, Dict[str, Any]]") -> "TuningDB":
+        """Union another DB's entries into this one.
+
+        Conflict policy (concurrent writers are additive, never destructive):
+        trial costs keep the *minimum* observed cost per PP point, ``best``
+        keeps the lower-cost record, histories concatenate.
+        """
+        entries = other._data if isinstance(other, TuningDB) else dict(other)
+        with self._lock:
+            _merge_entries(self._data, entries)
+        return self
 
     # -- write ---------------------------------------------------------------
 
@@ -55,9 +102,16 @@ class TuningDB:
     def record_best(
         self, bp: BasicParams, point: Mapping[str, Any], cost: float, layer: str
     ) -> None:
+        """Record the argmin of a *completed* search.
+
+        ``record_trial`` keeps a running best for crash robustness, but only
+        this call marks the entry ``final`` — the registry's zero-re-tune
+        fast path (``tuned_point``) trusts finals only, so an interrupted or
+        budget-capped sweep resumes instead of freezing its interim winner.
+        """
         with self._lock:
             entry = self._entry(bp, layer)
-            entry["best"] = {"point": dict(point), "cost": cost}
+            entry["best"] = {"point": dict(point), "cost": cost, "final": True}
             self._flush()
 
     def record_runtime_observation(
@@ -76,6 +130,13 @@ class TuningDB:
     def best_point(self, bp: BasicParams) -> Optional[Dict[str, Any]]:
         entry = self._data.get(bp.fingerprint())
         if entry and entry.get("best"):
+            return dict(entry["best"]["point"])
+        return None
+
+    def tuned_point(self, bp: BasicParams) -> Optional[Dict[str, Any]]:
+        """The best point, only if it came from a completed search."""
+        entry = self._data.get(bp.fingerprint())
+        if entry and entry.get("best") and entry["best"].get("final"):
             return dict(entry["best"]["point"])
         return None
 
@@ -100,7 +161,24 @@ class TuningDB:
         entry = self._data.get(bp.fingerprint(), {})
         return list(entry.get("history", []))
 
+    def fingerprints(self) -> list:
+        return list(self._data)
+
     # -- internals -------------------------------------------------------------
+
+    @staticmethod
+    def _read_file(path: str) -> Dict[str, Dict[str, Any]]:
+        with open(path) as f:
+            raw = json.load(f)
+        if isinstance(raw, dict) and "schema_version" in raw:
+            version = raw["schema_version"]
+            if version > SCHEMA_VERSION:
+                raise ValueError(
+                    f"TuningDB {path}: schema v{version} is newer than "
+                    f"supported v{SCHEMA_VERSION}"
+                )
+            return dict(raw.get("entries", {}))
+        return dict(raw)  # legacy v1: bare entries mapping
 
     def _entry(self, bp: BasicParams, layer: str) -> Dict[str, Any]:
         fp = bp.fingerprint()
@@ -109,16 +187,98 @@ class TuningDB:
         self._data[fp]["layer"] = layer
         return self._data[fp]
 
+    @staticmethod
+    def _file_sig(path: str) -> Optional[Tuple[int, int]]:
+        try:
+            st = os.stat(path)
+            return (st.st_mtime_ns, st.st_size)
+        except OSError:
+            return None
+
     def _flush(self) -> None:
+        """Atomically persist; caller must hold the lock.
+
+        If the file changed under us (a concurrent writer), its entries are
+        merged in first with *our* values winning on conflict — our in-memory
+        costs are fresh measurements, the disk's may be stale; the other
+        writer's shape classes and unknown points are adopted wholesale.  The
+        mtime/size signature skips the re-read entirely in the common
+        single-writer case (no O(file) read per trial).
+        """
         if not self.path:
             return
+        if os.path.exists(self.path) and self._file_sig(self.path) != self._disk_sig:
+            try:
+                _merge_entries(self._data, self._read_file(self.path),
+                               prefer_ours=True)
+            except (json.JSONDecodeError, OSError):
+                pass  # half-written foreign file; keep our view
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(self._data, f, indent=1, default=str)
+                json.dump(
+                    {"schema_version": SCHEMA_VERSION, "entries": self._data},
+                    f, indent=1, default=str,
+                )
             os.replace(tmp, self.path)
+            self._disk_sig = self._file_sig(self.path)
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+
+
+def _merge_entries(
+    into: Dict[str, Dict[str, Any]],
+    other: Mapping[str, Dict[str, Any]],
+    prefer_ours: bool = False,
+) -> None:
+    """Union ``other`` into ``into``.
+
+    Symmetric mode (``prefer_ours=False``, the public ``merge``): trial costs
+    keep the minimum, and for bests a *final* record beats a non-final one
+    regardless of cost — an interim best from a crashed sweep must never
+    displace a completed search's argmin; among equal finality, lower cost
+    wins.  ``prefer_ours=True`` (flush-time reconciliation) only adopts
+    shape classes / trial points / bests we don't already have: our values
+    are fresh measurements, the disk's may be stale.
+    """
+    for fp, theirs in other.items():
+        ours = into.get(fp)
+        if ours is None:
+            into[fp] = json.loads(json.dumps(theirs))  # deep copy
+            continue
+        trials = ours.setdefault("trials", {})
+        for key, cost in theirs.get("trials", {}).items():
+            if key not in trials:
+                trials[key] = cost
+            elif not prefer_ours and cost < trials[key]:
+                trials[key] = cost
+        their_best = theirs.get("best")
+        if their_best is not None and _best_beats(
+            their_best, ours.get("best"), prefer_ours
+        ):
+            ours["best"] = dict(their_best)
+        their_hist = theirs.get("history")
+        if their_hist:
+            hist = ours.setdefault("history", [])
+            seen = {json.dumps(h, sort_keys=True, default=str) for h in hist}
+            for h in their_hist:
+                if json.dumps(h, sort_keys=True, default=str) not in seen:
+                    hist.append(h)
+
+
+def _best_beats(
+    theirs: Dict[str, Any], ours: Optional[Dict[str, Any]], prefer_ours: bool
+) -> bool:
+    if ours is None:
+        return True
+    if prefer_ours:
+        # flush reconciliation: keep our record unless the other writer
+        # actually *finished* a search we haven't (our record_best, when it
+        # comes, overwrites unconditionally anyway)
+        return bool(theirs.get("final")) and not bool(ours.get("final"))
+    if bool(theirs.get("final")) != bool(ours.get("final")):
+        return bool(theirs.get("final"))
+    return theirs["cost"] < ours["cost"]

@@ -108,6 +108,13 @@ class ATRegion:
     def compiled_points(self) -> int:
         return len(self._compiled)
 
+    def is_compiled(self, point: Mapping[str, Any]) -> bool:
+        """True if this candidate is already materialized (warm/AOT)."""
+        return pp_key(point) in self._compiled
+
+    def is_compiled_key(self, key: str) -> bool:
+        return key in self._compiled
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (
             f"ATRegion({self.name!r}, space={self.space!r}, "

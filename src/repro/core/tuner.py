@@ -100,14 +100,17 @@ class RuntimeSelector:
         median = sorted(self._recent)[len(self._recent) // 2]
         if median <= self.tolerance * tuned:
             return False
-        # Demote: pick the best-ranked candidate that is not the current one.
-        current = pp_key(self.region.selected)
-        for key in self._ranking:
-            if key != current:
-                import json
+        # Demote: pick the best-ranked *precompiled* candidate that is not the
+        # current one (switching must stay free — no compilation at run time).
+        # If nothing is precompiled (plain regions), any ranked candidate will do.
+        import json
 
-                self.region.select(json.loads(key))
-                self._recent.clear()
-                self.switches += 1
-                return True
+        current = pp_key(self.region.selected)
+        others = [k for k in self._ranking if k != current]
+        pool = [k for k in others if self.region.is_compiled_key(k)] or others
+        if pool:
+            self.region.select(json.loads(pool[0]))
+            self._recent.clear()
+            self.switches += 1
+            return True
         return False

@@ -10,3 +10,8 @@ interpret=True on this CPU host; BlockSpec tiling targets TPU v5e VMEM).
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper +
 AT region over block shapes), ref.py (pure-jnp oracle).
 """
+
+# Importing the subpackages registers each kernel's KernelSpec with the
+# process-wide registry (repro.core.registry), which also lazy-imports this
+# module on a name miss — so `autotuned("ssm_scan")` works either way.
+from . import exb, flash_attention, rglru_scan, ssm_scan, stress  # noqa: E402,F401

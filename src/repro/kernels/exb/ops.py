@@ -14,7 +14,14 @@ from typing import Any, Dict, Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core import ATRegion, ParamSpace, PerfParam
+from repro.core import (
+    ATRegion,
+    BasicParams,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    register_kernel,
+)
 from repro.core.cost import TPU_V5E, HardwareSpec
 
 from .exb import exb_pallas, vmem_bytes
@@ -64,3 +71,36 @@ def analytic_cost(
     bytes_hbm = 6 * iv * iz * mx * my * 4 + 8 * iz * mx * my * 4 * (iv // biv)
     # 3-D fields are re-streamed once per iv-block row (index_map reuse)
     return bytes_hbm / hw.hbm_bandwidth + n_programs * grid_overhead_s
+
+
+def shape_class(inp) -> BasicParams:
+    iz, mx, my = inp["ex_re"].shape
+    return BasicParams.make(
+        kernel="exb",
+        iv=int(inp["vl"].shape[0]),
+        iz=int(iz),
+        mx=int(mx),
+        my=int(my),
+        dtype=str(inp["ex_re"].dtype),
+        backend=jax.default_backend(),
+    )
+
+
+def _bp_dims(bp: BasicParams):
+    return (bp["iv"], bp["iz"], bp["mx"], bp["my"])
+
+
+register_kernel(
+    KernelSpec(
+        "exb",
+        make_region=lambda bp: exb_region(dims=_bp_dims(bp)),
+        shape_class=shape_class,
+        # install-layer AT on a host without the target hardware: the
+        # memory-bound analytic model replaces wall-clock measurement
+        cost_factory=lambda region, bp, args, kwargs: (
+            lambda point: analytic_cost(point, dims=_bp_dims(bp))
+        ),
+        tags=("pallas",),
+    ),
+    replace=True,
+)

@@ -6,7 +6,7 @@ from typing import Any, Mapping
 
 import jax
 
-from repro.core import ATRegion, ParamSpace, PerfParam
+from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
 
 from .flash_attention import flash_attention, vmem_bytes
 from .ref import attention_ref
@@ -40,3 +40,26 @@ def flash_region(
         return lambda q, k, v: attention(q, k, v, block_q=bq, block_kv=bkv)
 
     return ATRegion("flash_attention_pallas", space, instantiate, oracle=attention_ref)
+
+
+def shape_class(q, k, v) -> BasicParams:
+    """Bucket a call: block candidates depend on (seq, head_dim), not on
+    batch size or head counts, so those are dropped from the DB key."""
+    return BasicParams.make(
+        kernel="flash_attention",
+        seq=int(q.shape[1]),
+        hd=int(q.shape[3]),
+        dtype=str(q.dtype),
+        backend=jax.default_backend(),
+    )
+
+
+register_kernel(
+    KernelSpec(
+        "flash_attention",
+        make_region=lambda bp: flash_region(bp["seq"], bp["hd"]),
+        shape_class=shape_class,
+        tags=("pallas",),
+    ),
+    replace=True,
+)

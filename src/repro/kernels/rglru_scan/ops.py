@@ -6,7 +6,7 @@ from typing import Any, Mapping
 
 import jax
 
-from repro.core import ATRegion, ParamSpace, PerfParam
+from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
 
 from .ref import rglru_scan_ref
 from .rglru_scan import rglru_scan, vmem_bytes
@@ -37,3 +37,25 @@ def rglru_region(
         return lambda x, r, i, lam: scan(x, r, i, lam, block_w=bw, chunk=ck)
 
     return ATRegion("rglru_scan_pallas", space, instantiate, oracle=rglru_scan_ref)
+
+
+def shape_class(x, r, i, lam) -> BasicParams:
+    """(width, seq) fix the candidate family; batch is dropped."""
+    return BasicParams.make(
+        kernel="rglru_scan",
+        width=int(x.shape[-1]),
+        seq=int(x.shape[1]),
+        dtype=str(x.dtype),
+        backend=jax.default_backend(),
+    )
+
+
+register_kernel(
+    KernelSpec(
+        "rglru_scan",
+        make_region=lambda bp: rglru_region(bp["width"], bp["seq"]),
+        shape_class=shape_class,
+        tags=("pallas",),
+    ),
+    replace=True,
+)

@@ -6,7 +6,7 @@ from typing import Any, Mapping
 
 import jax
 
-from repro.core import ATRegion, ParamSpace, PerfParam
+from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
 
 from .ref import ssm_scan_ref
 from .ssm_scan import ssm_scan, vmem_bytes
@@ -40,3 +40,26 @@ def ssm_region(
                                                 block_d=bd, chunk=ck)
 
     return ATRegion("ssm_scan_pallas", space, instantiate, oracle=ssm_scan_ref)
+
+
+def shape_class(x, dt, A, Bc, Cc, D) -> BasicParams:
+    """(d_inner, seq, n_state) fix the candidate family; batch is dropped."""
+    return BasicParams.make(
+        kernel="ssm_scan",
+        d_inner=int(x.shape[-1]),
+        seq=int(x.shape[1]),
+        n_state=int(A.shape[-1]),
+        dtype=str(x.dtype),
+        backend=jax.default_backend(),
+    )
+
+
+register_kernel(
+    KernelSpec(
+        "ssm_scan",
+        make_region=lambda bp: ssm_region(bp["d_inner"], bp["seq"], bp["n_state"]),
+        shape_class=shape_class,
+        tags=("pallas",),
+    ),
+    replace=True,
+)

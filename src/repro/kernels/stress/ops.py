@@ -6,7 +6,7 @@ from typing import Any, Mapping
 
 import jax
 
-from repro.core import ATRegion, ParamSpace, PerfParam
+from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
 
 from .ref import stress_ref
 from .stress import stress_pallas, vmem_bytes
@@ -31,3 +31,26 @@ def stress_region(dims=(64, 64, 64), vmem_budget: int = 16 * 2**20) -> ATRegion:
         return lambda inp: stress(inp, block_k=bk, block_j=bj)
 
     return ATRegion("stress_pallas", space, instantiate, oracle=stress_ref)
+
+
+def shape_class(inp) -> BasicParams:
+    nk, nj, ni = next(iter(inp.values())).shape
+    return BasicParams.make(
+        kernel="stress",
+        nk=int(nk),
+        nj=int(nj),
+        ni=int(ni),
+        dtype=str(next(iter(inp.values())).dtype),
+        backend=jax.default_backend(),
+    )
+
+
+register_kernel(
+    KernelSpec(
+        "stress",
+        make_region=lambda bp: stress_region(dims=(bp["nk"], bp["nj"], bp["ni"])),
+        shape_class=shape_class,
+        tags=("pallas",),
+    ),
+    replace=True,
+)

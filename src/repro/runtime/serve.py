@@ -2,9 +2,13 @@
 
 A deliberately small continuous-batching server: requests are grouped into
 fixed-size batches (padding prompts to a shared length), prefilled once, then
-decoded step-by-step.  Both the prefill and decode executables are built once
-per (batch, length) bucket — serving-side AOT candidate generation, matching
-the paper's no-runtime-codegen discipline.
+decoded step-by-step.  Both the prefill and decode paths are registry ops
+(:mod:`repro.core.registry`), built once per (batch, length) shape class —
+serving-side AOT candidate generation, matching the paper's no-runtime-codegen
+discipline.  Their candidate families are single-point for now: every region
+candidate must be semantically identical (greedy outputs are part of the
+serving contract), and no output-preserving serving PP exists yet; traffic-
+class PPs land here once an attention-masked prefill makes padding free.
 """
 from __future__ import annotations
 
@@ -16,10 +20,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import (
+    AutotunedOp,
+    BasicParams,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    TuningDB,
+    register_kernel,
+)
 from repro.data.pipeline import ServingRequest
 from repro.models import decode_fn, prefill_fn
 from repro.models.config import ModelConfig
-
 
 @dataclass
 class ServeStats:
@@ -39,14 +51,74 @@ class Server:
         params: Any,
         batch_size: int = 4,
         max_len: int = 128,
+        tuning_db: Optional[TuningDB] = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
+        self.db = tuning_db or TuningDB()
         self._prefill = jax.jit(lambda p, b: prefill_fn(p, b, cfg))
         self._decode = jax.jit(lambda p, b, c: decode_fn(p, b, c, cfg))
+        self.prefill_op = self._make_prefill_op()
+        self.decode_op = self._make_decode_op()
         self.stats = ServeStats()
+
+    # -- registry ops ----------------------------------------------------------
+
+    def _make_prefill_op(self) -> AutotunedOp:
+        cfg, prefill = self.cfg, self._prefill
+
+        def instantiate(point):
+            return lambda params, batch: prefill(params, batch)
+
+        def shape_class(params, batch) -> BasicParams:
+            B, plen = batch["tokens"].shape
+            return BasicParams.make(
+                kernel="serve_prefill", arch=cfg.name, batch=int(B),
+                plen=int(plen), backend=jax.default_backend(),
+            )
+
+        spec = register_kernel(
+            KernelSpec(
+                name=f"serve_prefill/{cfg.name}",
+                make_region=lambda bp: _region(
+                    "serve_prefill", [PerfParam("impl", ("jit",))], instantiate
+                ),
+                shape_class=shape_class,
+                tags=("runtime", "serve"),
+            ),
+            replace=True,
+        )
+        return AutotunedOp(spec, db=self.db, tune=False, warm=False, monitor=False)
+
+    def _make_decode_op(self) -> AutotunedOp:
+        cfg, decode = self.cfg, self._decode
+
+        def instantiate(point):
+            return lambda params, batch, cache: decode(params, batch, cache)
+
+        def shape_class(params, batch, cache) -> BasicParams:
+            return BasicParams.make(
+                kernel="serve_decode", arch=cfg.name,
+                batch=int(batch["tokens"].shape[0]),
+                backend=jax.default_backend(),
+            )
+
+        spec = register_kernel(
+            KernelSpec(
+                name=f"serve_decode/{cfg.name}",
+                make_region=lambda bp: _region(
+                    "serve_decode", [PerfParam("impl", ("jit",))], instantiate
+                ),
+                shape_class=shape_class,
+                tags=("runtime", "serve"),
+            ),
+            replace=True,
+        )
+        return AutotunedOp(spec, db=self.db, tune=False, warm=False, monitor=False)
+
+    # -- batching --------------------------------------------------------------
 
     def _batch_inputs(self, group: Sequence[ServingRequest], plen: int) -> Dict[str, Any]:
         B = len(group)
@@ -77,7 +149,7 @@ class Server:
             batch = self._batch_inputs(group, plen)
 
             t0 = time.perf_counter()
-            logits, cache = self._prefill(self.params, batch)
+            logits, cache = self.prefill_op(self.params, batch)
             logits.block_until_ready()
             self.stats.prefill_s += time.perf_counter() - t0
 
@@ -93,7 +165,7 @@ class Server:
                     p = cache["len"]
                     pos = jnp.broadcast_to(p, (len(group), 1)).astype(jnp.int32)
                     dbatch["positions"] = jnp.broadcast_to(pos, (3, len(group), 1))
-                logits, cache = self._decode(self.params, dbatch, cache)
+                logits, cache = self.decode_op(self.params, dbatch, cache)
                 next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             jax.block_until_ready(next_tok)
             self.stats.decode_s += time.perf_counter() - t0
@@ -102,3 +174,9 @@ class Server:
             for gi, r in enumerate(group[: len(requests[i : i + self.batch_size])]):
                 out[r.rid] = gen[gi][: r.max_new_tokens]
         return out
+
+
+def _region(name: str, params: list, instantiate):
+    from repro.core import ATRegion
+
+    return ATRegion(name, ParamSpace(params), instantiate)

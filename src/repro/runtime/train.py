@@ -32,11 +32,13 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core import (
     ATRegion,
+    AutotunedOp,
     BasicParams,
+    KernelSpec,
     ParamSpace,
     PerfParam,
-    RuntimeSelector,
     TuningDB,
+    register_kernel,
 )
 from repro.models import param_specs, train_loss
 from repro.models.config import ModelConfig
@@ -137,19 +139,39 @@ class Trainer:
         self.straggler_events = 0
         self.restarts = 0
 
-        # The AT region over microbatch degree (run-time layer).
+        # The train step is a registry op like any kernel: the microbatch
+        # degree is its PP (run-time layer), and its shape class is fixed by
+        # (arch, candidate degrees).  The configured degree is pinned rather
+        # than wall-clock-tuned so restarted runs stay bit-deterministic.
         degrees = tuple(loop_cfg.microbatch_candidates)
-        self.region = ATRegion(
-            name="train_step",
-            space=ParamSpace([PerfParam("n_micro", degrees)]),
-            instantiate=lambda pt: jax.jit(
-                make_train_step(cfg, opt_cfg, pt["n_micro"])
+        bp = BasicParams.make(arch=cfg.name, kind="train_runtime", micro=degrees)
+        spec = register_kernel(
+            KernelSpec(
+                name=f"train_step/{cfg.name}",
+                make_region=lambda _bp: ATRegion(
+                    name="train_step",
+                    space=ParamSpace([PerfParam("n_micro", degrees)]),
+                    instantiate=lambda pt: jax.jit(
+                        make_train_step(cfg, opt_cfg, pt["n_micro"])
+                    ),
+                ),
+                shape_class=lambda *a, **k: bp,
+                tags=("runtime",),
             ),
+            replace=True,
         )
-        self.region.select({"n_micro": loop_cfg.n_microbatches})
-        self.bp = BasicParams.make(
-            arch=cfg.name, kind="train_runtime", micro=degrees
+        self.op = AutotunedOp(
+            spec,
+            db=self.db,
+            tune=False,
+            warm=False,
+            monitor=False,  # the loop times steps itself (it also tracks
+            # straggler_events), feeding the selector directly
+            tolerance=loop_cfg.straggler_tolerance,
         )
+        self.bp = bp
+        self._state = self.op.select({"n_micro": loop_cfg.n_microbatches})
+        self.region = self._state.region
 
     # -- state ------------------------------------------------------------------
 
@@ -176,9 +198,7 @@ class Trainer:
                 start, tree = restored
                 params, opt_state = tree["p"], tree["o"]
 
-        selector = RuntimeSelector(
-            self.region, self.bp, self.db, tolerance=self.loop.straggler_tolerance
-        )
+        selector = self._state.selector
         history: Dict[str, List[float]] = {"loss": [], "step_time": [], "step": []}
         step_times: List[float] = []
 

@@ -1,0 +1,119 @@
+"""Shared kernel-conformance harness.
+
+One declarative case per registered Pallas kernel: a small shape class, an
+input builder, the `ref.py` oracle, and per-dtype error thresholds.  The
+suite in test_conformance.py sweeps *every feasible point* of the case's
+region against the oracle — the semantic contract every ATRegion candidate
+family must satisfy (all candidates are interchangeable), and the single
+place to add a case when registering a new kernel (docs/registry.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.exb import ops as exb_ops, ref as exb_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rglru_scan import ops as rg_ops, ref as rg_ref
+from repro.kernels.ssm_scan import ops as ssm_ops, ref as ssm_ref
+from repro.kernels.stress import ops as st_ops, ref as st_ref
+
+# (rtol, atol) per dtype name — bf16 kernels accumulate in f32 but round
+# inputs/outputs, hence the looser bound.
+DEFAULT_TOL: Dict[str, Tuple[float, float]] = {
+    "float32": (2e-4, 1e-5),
+    "bfloat16": (2e-2, 2e-2),
+}
+
+
+@dataclass
+class ConformanceCase:
+    """One kernel's small-shape conformance contract."""
+
+    name: str
+    region_factory: Callable[[], Any]          # () -> ATRegion (small shapes)
+    make_args: Callable[[jax.Array], tuple]    # key -> kernel positional args
+    oracle: Callable[..., Any]                 # ref.py ground truth
+    dtypes: Tuple[str, ...] = ("float32",)
+    tol: Dict[str, Tuple[float, float]] = field(default_factory=lambda: dict(DEFAULT_TOL))
+
+    def cast_args(self, args: tuple, dtype: str) -> tuple:
+        target = jnp.dtype(dtype)
+        return tuple(
+            jax.tree.map(
+                lambda x: x.astype(target)
+                if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating)
+                else x,
+                a,
+            )
+            for a in args
+        )
+
+
+def assert_tree_allclose(out: Any, expected: Any, rtol: float, atol: float, label: str) -> None:
+    """Structural allclose over arrays / tuples / dicts of arrays."""
+    out_leaves, out_tree = jax.tree.flatten(out)
+    exp_leaves, exp_tree = jax.tree.flatten(expected)
+    assert out_tree == exp_tree, f"{label}: structure {out_tree} != {exp_tree}"
+    for i, (o, e) in enumerate(zip(out_leaves, exp_leaves)):
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32),
+            np.asarray(e, np.float32),
+            rtol=rtol,
+            atol=atol,
+            err_msg=f"{label}: leaf {i}",
+        )
+
+
+def _flash_args(key: jax.Array) -> tuple:
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 1, 16), jnp.float32)
+    return q, k, v
+
+
+CASES: Dict[str, ConformanceCase] = {
+    case.name: case
+    for case in (
+        ConformanceCase(
+            name="exb",
+            region_factory=lambda: exb_ops.exb_region(dims=(4, 4, 16, 9)),
+            make_args=lambda key: (exb_ref.make_inputs(key, dims=(4, 4, 16, 9)),),
+            oracle=exb_ref.exb_ref,
+        ),
+        ConformanceCase(
+            name="stress",
+            region_factory=lambda: st_ops.stress_region(dims=(8, 8, 16)),
+            make_args=lambda key: (st_ref.make_inputs(key, dims=(8, 8, 16)),),
+            oracle=st_ref.stress_ref,
+        ),
+        ConformanceCase(
+            name="flash_attention",
+            region_factory=lambda: fa_ops.flash_region(seq_len=256, head_dim=16),
+            make_args=_flash_args,
+            oracle=lambda q, k, v: fa_ref.attention_ref(q, k, v, causal=True),
+            dtypes=("float32", "bfloat16"),
+        ),
+        ConformanceCase(
+            name="ssm_scan",
+            region_factory=lambda: ssm_ops.ssm_region(
+                d_inner=128, seq_len=64, n_state=4
+            ),
+            make_args=lambda key: ssm_ref.make_inputs(key, B=1, S=64, D=128, N=4),
+            oracle=ssm_ref.ssm_scan_ref,
+            tol={"float32": (1e-4, 1e-4)},
+        ),
+        ConformanceCase(
+            name="rglru_scan",
+            region_factory=lambda: rg_ops.rglru_region(width=128, seq_len=64),
+            make_args=lambda key: rg_ref.make_inputs(key, B=1, S=64, W=128),
+            oracle=rg_ref.rglru_scan_ref,
+            tol={"float32": (1e-4, 1e-4)},
+        ),
+    )
+}

@@ -1,0 +1,58 @@
+"""Kernel conformance: every registered kernel ≡ its ref.py oracle across all
+feasible points of a small shape class (replaces the per-kernel copy-pasted
+shape checks that used to live in test_kernels.py)."""
+import jax
+import pytest
+
+from repro.core import REGISTRY
+
+from conformance import CASES, assert_tree_allclose
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cases():
+    for case in CASES.values():
+        for dtype in case.dtypes:
+            yield pytest.param(case, dtype, id=f"{case.name}-{dtype}")
+
+
+@pytest.mark.parametrize("case,dtype", _cases())
+def test_kernel_matches_oracle_on_all_feasible_points(case, dtype):
+    region = case.region_factory()
+    args = case.cast_args(case.make_args(KEY), dtype)
+    expected = case.oracle(*args)
+    rtol, atol = case.tol.get(dtype, (2e-2, 2e-2))
+    points = list(region.space.points())
+    assert points, f"{case.name}: empty feasible set"
+    for point in points:
+        out = region.candidate(point)(*args)
+        assert_tree_allclose(
+            out, expected, rtol, atol, label=f"{case.name}@{point} [{dtype}]"
+        )
+
+
+def test_conformance_covers_every_registered_kernel():
+    """Adding a kernel to the registry without a conformance case is an error
+    — the harness is the registration contract (docs/registry.md)."""
+    registered = set(REGISTRY.names(tag="pallas"))
+    assert registered, "no kernels registered"
+    assert registered == set(CASES), (
+        f"conformance cases out of sync with registry: "
+        f"missing={registered - set(CASES)} stale={set(CASES) - registered}"
+    )
+
+
+def test_candidate_family_is_interchangeable():
+    """Selecting any feasible point must not change results — the property
+    that makes run-time switching free *and safe*."""
+    case = CASES["stress"]
+    region = case.region_factory()
+    args = case.make_args(KEY)
+    outs = []
+    for point in region.space.points():
+        region.select(point)
+        outs.append(region(*args))
+    first = outs[0]
+    for out in outs[1:]:
+        assert_tree_allclose(out, first, 1e-6, 1e-7, label="stress family")

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -164,7 +166,8 @@ def test_db_atomic_write(tmp_path):
     db.record_trial(bp, {"i": 0}, 1.0, "install")
     with open(path) as f:
         data = json.load(f)
-    assert bp.fingerprint() in data
+    assert data["schema_version"] == TuningDB.SCHEMA_VERSION
+    assert bp.fingerprint() in data["entries"]
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +194,72 @@ def test_successive_halving():
         space, lambda p, budget: abs(p["i"] - 7) + 1.0 / budget
     )
     assert res.best.point["i"] == 7
+
+
+# ---------------------------------------------------------------------------
+# Search-strategy invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    fa=st.lists(st.integers(0, 10**6), min_size=2, max_size=6, unique=True),
+    fb=st.lists(st.integers(0, 10**6), min_size=2, max_size=6, unique=True),
+)
+def test_coordinate_descent_equals_exhaustive_on_separable(fa, fb):
+    """On separable costs f(a)+g(b) the hillclimb is exact: it must land on
+    the same argmin as exhaustive enumeration."""
+    space = ParamSpace(
+        [PerfParam("a", tuple(range(len(fa)))), PerfParam("b", tuple(range(len(fb))))]
+    )
+    cost = lambda p: float(fa[p["a"]] + fb[p["b"]])
+    exhaustive = ExhaustiveSearch().run(space, cost)
+    descent = CoordinateDescent().run(space, cost)
+    assert descent.best.point == exhaustive.best.point
+    assert descent.best.cost == exhaustive.best.cost
+
+
+def test_successive_halving_never_returns_infeasible():
+    space = ParamSpace(
+        [PerfParam("i", tuple(range(12)))],
+        constraint=lambda p: p["i"] % 3 != 0,  # prune a third of the space
+    )
+    res = SuccessiveHalving(initial_budget=1).run(
+        space, lambda p, budget: float(p["i"]) + 1.0 / budget
+    )
+    assert space.feasible(res.best.point)
+    assert all(space.feasible(t.point) for t in res.trials)
+
+
+@pytest.mark.parametrize(
+    "search,budgeted",
+    [
+        (ExhaustiveSearch(), False),
+        (CoordinateDescent(), False),
+        (SuccessiveHalving(initial_budget=1), True),
+    ],
+    ids=["exhaustive", "coordinate_descent", "successive_halving"],
+)
+def test_every_strategy_records_every_evaluation(search, budgeted):
+    """SearchResult.trials is the audit log the DB persists: one entry per
+    cost-function invocation, no more (dedup) and no fewer (no silent evals)."""
+    space = ParamSpace(
+        [PerfParam("a", (0, 1, 2, 3)), PerfParam("b", (0, 1, 2))],
+        constraint=lambda p: p["a"] + p["b"] < 6,
+    )
+    calls = []
+
+    def base(p):
+        calls.append(dict(p))
+        return float((p["a"] - 1) ** 2 + (p["b"] - 2) ** 2)
+
+    cost = (lambda p, budget: base(p)) if budgeted else base
+    res = search.run(space, cost)
+    assert len(res.trials) == len(calls)
+    assert res.evaluations == len(calls)
+    assert all(space.feasible(t.point) for t in res.trials)
+    recorded = {pp_key(t.point) for t in res.trials}
+    assert pp_key(res.best.point) in recorded
 
 
 # ---------------------------------------------------------------------------

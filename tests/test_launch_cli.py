@@ -31,7 +31,8 @@ def test_tune_cell_selects_kvseq_for_decode(tmp_path):
     assert "best PP" in proc.stdout
     assert "'rule': 'tp_kvseq'" in proc.stdout
     data = json.load(open(db))
-    assert len(data) == 1  # one BP entry persisted
+    assert data["schema_version"] == 2
+    assert len(data["entries"]) == 1  # one BP entry persisted
 
 
 def test_train_cli_runs():

@@ -1,0 +1,383 @@
+"""Tests for the autotuned-op registry (repro.core.registry / .autotuned).
+
+The core behavioural tests run without hypothesis (they back the PR's
+acceptance criteria); the property-based sections are added only when
+hypothesis is installed.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ATRegion,
+    AutotunedOp,
+    BasicParams,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    Registry,
+    RuntimeSelector,
+    TuningDB,
+    Tuner,
+    pp_key,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property sections skip, core tests still run
+    given = None
+
+
+def _toy_spec(costs, calls, name="toy"):
+    """A spec whose cost function counts its own invocations."""
+    space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            calls.append(point["i"])
+            return float(costs[point["i"]])
+
+        return cost
+
+    return KernelSpec(
+        name,
+        make_region=lambda bp: ATRegion(
+            name, space, lambda p: (lambda x: x * p["i"])
+        ),
+        shape_class=lambda x: BasicParams.make(kernel=name, n=int(x.shape[0])),
+        cost_factory=cost_factory,
+    )
+
+
+X = jnp.ones(4)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: cache hits perform zero cost evaluations
+# ---------------------------------------------------------------------------
+
+
+def test_second_call_same_shape_class_zero_evaluations():
+    calls = []
+    op = AutotunedOp(_toy_spec([3.0, 1.0, 2.0], calls), db=TuningDB())
+    op(X)
+    assert len(calls) == 3  # exhaustive first tune
+    selected = dict(op.resolve(X).region.selected)
+    op(X)
+    assert len(calls) == 3  # in-process hit: no re-tune
+    assert op.resolve(X).region.selected == selected == {"i": 1}
+
+
+def test_distinct_shape_classes_tune_independently():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB())
+    op(jnp.ones(4))
+    op(jnp.ones(8))  # different bucket -> its own tuning
+    assert len(calls) == 4
+    assert len(op.states()) == 2
+
+
+def test_db_hit_across_fresh_op_zero_evaluations(tmp_path):
+    path = str(tmp_path / "db.json")
+    calls = []
+    spec = _toy_spec([5.0, 4.0, 1.0, 2.0], calls)
+    AutotunedOp(spec, db=TuningDB(path))(X)
+    assert len(calls) == 4
+    # a fresh op + fresh DB object over the same file == a fresh process
+    op2 = AutotunedOp(spec, db=TuningDB(path))
+    state = op2.resolve(X)
+    assert len(calls) == 4  # zero evaluations
+    assert state.from_cache and state.region.selected == {"i": 2}
+
+
+def test_db_persists_across_real_process(tmp_path):
+    path = str(tmp_path / "db.json")
+    calls = []
+    spec = _toy_spec([5.0, 1.0, 2.0], calls)
+    AutotunedOp(spec, db=TuningDB(path))(X)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    code = (
+        "from repro.core import TuningDB, BasicParams;"
+        f"db = TuningDB({path!r});"
+        "bp = BasicParams.make(kernel='toy', n=4);"
+        "assert db.best_point(bp) == {'i': 1}, db.best_point(bp);"
+        "print('ok')"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=120,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "ok" in out.stdout
+
+
+def test_trial_budget_caps_evaluations_and_resumes(tmp_path):
+    path = str(tmp_path / "db.json")
+    calls = []
+    spec = _toy_spec([5.0, 4.0, 3.0, 2.0, 1.0], calls)
+    op = AutotunedOp(spec, db=TuningDB(path), trial_budget=2)
+    op(X)
+    assert len(calls) == 2  # budget respected
+    assert op.resolve(X).region.selected == {"i": 1}  # interim argmin
+    # a later run resumes: recorded trials are reused, budget buys new points
+    op2 = AutotunedOp(spec, db=TuningDB(path), trial_budget=2)
+    op2(X)
+    assert len(calls) == 4
+    assert op2.resolve(X).region.selected == {"i": 3}
+
+
+def test_top_k_candidates_are_warmed():
+    calls = []
+    op = AutotunedOp(_toy_spec([4.0, 3.0, 2.0, 1.0], calls), db=TuningDB(), top_k=3)
+    state = op.resolve(X)
+    assert state.warmed == 3 and state.region.compiled_points() == 3
+    ranked = sorted(op.db.trials(state.bp).items(), key=lambda kv: kv[1])[:3]
+    for key, _ in ranked:
+        assert state.region.is_compiled_key(key)
+
+
+# ---------------------------------------------------------------------------
+# Registry plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_register_get_and_duplicate_policy():
+    reg = Registry()
+    spec = _toy_spec([1.0], [], name="dup")
+    reg.register(spec)
+    assert reg.get("dup") is spec
+    with pytest.raises(ValueError):
+        reg.register(spec)
+    reg.register(_toy_spec([2.0], [], name="dup"), replace=True)
+    with pytest.raises(KeyError):
+        reg.get("missing")
+
+
+def test_registry_default_ops_are_cached_per_name():
+    reg = Registry()
+    reg.register(_toy_spec([1.0, 2.0], [], name="cached"))
+    assert reg.op("cached") is reg.op("cached")
+    assert reg.op("cached", top_k=1) is not reg.op("cached")
+
+
+def test_global_registry_serves_pallas_kernels():
+    from repro.core import REGISTRY
+
+    names = REGISTRY.names(tag="pallas")
+    assert set(names) >= {"exb", "flash_attention", "rglru_scan", "ssm_scan", "stress"}
+
+
+# ---------------------------------------------------------------------------
+# RuntimeSelector: demotion lands on the next-best precompiled candidate
+# ---------------------------------------------------------------------------
+
+
+def _demotion_case(costs, warm_indices, tolerance=1.5, window=4):
+    space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+    region = ATRegion("r", space, lambda p: (lambda: p["i"]))
+    db = TuningDB()
+    bp = BasicParams.make(arch="t")
+    Tuner(db).tune(region, bp, lambda p: float(costs[p["i"]]))
+    for i in warm_indices:
+        region.candidate({"i": i})
+    sel = RuntimeSelector(region, bp, db, tolerance=tolerance, window=window)
+    return region, db, bp, sel
+
+
+def test_demotion_lands_on_next_best_precompiled():
+    costs = [1.0, 5.0, 2.0, 4.0, 3.0]
+    region, db, bp, sel = _demotion_case(costs, warm_indices=[0, 3, 4])
+    assert region.selected == {"i": 0}
+    for _ in range(4):
+        switched = sel.observe(100.0)  # injected cost spike
+    assert switched
+    # next-best among the *warmed* candidates is i=4 (cost 3.0), even though
+    # i=2 (cost 2.0) ranks higher overall — switching must never compile
+    assert region.selected == {"i": 4}
+
+
+def test_demotion_falls_back_to_ranking_when_nothing_warm():
+    region, db, bp, sel = _demotion_case([1.0, 3.0, 2.0], warm_indices=[])
+    for _ in range(4):
+        sel.observe(100.0)
+    assert region.selected == {"i": 2}  # best-ranked non-current
+
+
+def test_no_demotion_without_regression():
+    region, db, bp, sel = _demotion_case([1.0, 2.0], warm_indices=[0, 1])
+    for _ in range(8):
+        assert not sel.observe(1.0)  # at tuned cost: no switch
+    assert region.selected == {"i": 0} and sel.switches == 0
+
+
+# ---------------------------------------------------------------------------
+# TuningDB: save/load round-trip, merge of concurrent writers
+# ---------------------------------------------------------------------------
+
+
+def test_db_save_load_roundtrip_exact(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDB()
+    bp = BasicParams.make(arch="a", n=4)
+    for i, c in enumerate([3.0, 1.5, 2.25]):
+        db.record_trial(bp, {"i": i}, c, "before_execution")
+    db.record_runtime_observation(bp, {"i": 1}, 1.6)
+    db.save(path)
+    loaded = TuningDB.load(path)
+    assert loaded.trials(bp) == db.trials(bp)
+    assert loaded.best_point(bp) == db.best_point(bp) == {"i": 1}
+    assert loaded.best_cost(bp) == 1.5
+    assert loaded.history(bp) == db.history(bp)
+
+
+def test_db_merge_concurrent_writers(tmp_path):
+    path = str(tmp_path / "db.json")
+    bp_a = BasicParams.make(arch="a")
+    bp_b = BasicParams.make(arch="b")
+    w1 = TuningDB(path)
+    w2 = TuningDB(path)  # opened before w1 writes: snapshot is empty
+    w1.record_trial(bp_a, {"i": 0}, 2.0, "install")
+    w2.record_trial(bp_b, {"j": 1}, 3.0, "install")  # merge-on-flush
+    merged = TuningDB(path)
+    assert merged.trial_cost(bp_a, {"i": 0}) == 2.0
+    assert merged.trial_cost(bp_b, {"j": 1}) == 3.0
+
+
+def test_db_reads_legacy_v1_layout(tmp_path):
+    """Seed-era DBs (bare entries mapping, no envelope) still load."""
+    path = str(tmp_path / "db.json")
+    bp = BasicParams.make(arch="t")
+    legacy = TuningDB(path)
+    legacy.record_trial(bp, {"i": 1}, 2.0, "install")
+    with open(path) as f:
+        data = json.load(f)
+    with open(path, "w") as f:
+        json.dump(data["entries"], f)  # strip the envelope back to v1
+    db = TuningDB(path)
+    assert db.trial_cost(bp, {"i": 1}) == 2.0
+    assert db.tuned_point(bp) is None  # v1 bests carry no final flag
+
+
+def test_db_rejects_future_schema(tmp_path):
+    path = str(tmp_path / "db.json")
+    with open(path, "w") as f:
+        json.dump({"schema_version": 99, "entries": {}}, f)
+    with pytest.raises(ValueError, match="newer than supported"):
+        TuningDB(path)
+
+
+def test_merge_final_best_beats_lower_cost_interim():
+    """A completed search's argmin must never be displaced by a lucky-low
+    interim cost from a crashed sweep (record_trial's running best)."""
+    bp = BasicParams.make(arch="a")
+    done, crashed = TuningDB(), TuningDB()
+    done.record_trial(bp, {"i": 0}, 2.0, "before_execution")
+    done.record_best(bp, {"i": 0}, 2.0, "before_execution")  # final
+    crashed.record_trial(bp, {"i": 1}, 1.0, "before_execution")  # interim only
+    done.merge(crashed)
+    assert done.tuned_point(bp) == {"i": 0}  # final survived
+    assert done.trial_cost(bp, {"i": 1}) == 1.0  # trial still united
+    # and symmetric: merging the final INTO the crashed view adopts it
+    crashed.record_trial(bp, {"i": 0}, 2.0, "before_execution")
+    crashed.merge(done)
+    assert crashed.tuned_point(bp) == {"i": 0}
+
+
+def test_flush_keeps_fresh_measurement_over_stale_disk_min(tmp_path):
+    """Re-measuring a point must stick: flush reconciliation never lets a
+    stale (optimistically low) on-disk cost overwrite the fresh value."""
+    path = str(tmp_path / "db.json")
+    bp = BasicParams.make(arch="a")
+    old = TuningDB(path)
+    old.record_trial(bp, {"i": 0}, 0.001, "install")  # stale lucky timing
+    fresh = TuningDB(path)
+    fresh.record_trial(bp, {"i": 0}, 5.0, "install")  # honest re-measure
+    assert fresh.trial_cost(bp, {"i": 0}) == 5.0
+    assert TuningDB(path).trial_cost(bp, {"i": 0}) == 5.0
+
+
+def test_db_merge_keeps_min_cost_and_best():
+    bp = BasicParams.make(arch="a")
+    d1, d2 = TuningDB(), TuningDB()
+    d1.record_trial(bp, {"i": 0}, 2.0, "install")
+    d2.record_trial(bp, {"i": 0}, 1.0, "install")
+    d2.record_trial(bp, {"i": 1}, 5.0, "install")
+    d1.merge(d2)
+    assert d1.trial_cost(bp, {"i": 0}) == 1.0
+    assert d1.trial_cost(bp, {"i": 1}) == 5.0
+    assert d1.best_point(bp) == {"i": 0} and d1.best_cost(bp) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Property-based sections (hypothesis only)
+# ---------------------------------------------------------------------------
+
+if given is not None:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        costs=st.lists(
+            st.floats(min_value=0.01, max_value=100, allow_nan=False),
+            min_size=2, max_size=8, unique=True,
+        )
+    )
+    def test_property_cache_hit_identical_point_no_reeval(costs):
+        calls = []
+        op = AutotunedOp(_toy_spec(costs, calls), db=TuningDB())
+        first = dict(op.resolve(X).region.selected)
+        n = len(calls)
+        assert first == {"i": int(np.argmin(costs))}
+        for _ in range(3):
+            assert dict(op.resolve(X).region.selected) == first
+        assert len(calls) == n
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        trials=st.dictionaries(
+            st.integers(0, 30),
+            st.floats(min_value=1e-6, max_value=1e6, allow_nan=False),
+            min_size=1, max_size=12,
+        ),
+        arch=st.sampled_from(["a", "b", "c"]),
+    )
+    def test_property_db_roundtrip(tmp_path_factory, trials, arch):
+        path = str(tmp_path_factory.mktemp("db") / "db.json")
+        db = TuningDB()
+        bp = BasicParams.make(arch=arch)
+        for i, c in trials.items():
+            db.record_trial(bp, {"i": i}, c, "before_execution")
+        db.save(path)
+        loaded = TuningDB.load(path)
+        assert loaded.trials(bp) == db.trials(bp)
+        assert loaded.best_point(bp) == db.best_point(bp)
+        assert loaded.best_cost(bp) == db.best_cost(bp)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        costs=st.lists(
+            st.floats(min_value=0.01, max_value=100, allow_nan=False),
+            min_size=2, max_size=10, unique=True,
+        ),
+        data=st.data(),
+    )
+    def test_property_demotion_always_lands_on_best_warm(costs, data):
+        n = len(costs)
+        warm = data.draw(
+            st.sets(st.integers(0, n - 1), min_size=0, max_size=n)
+        )
+        region, db, bp, sel = _demotion_case(costs, warm_indices=sorted(warm))
+        current = dict(region.selected)
+        for _ in range(4):
+            sel.observe(1e9)
+        others = [i for i in range(n) if {"i": i} != current]
+        warm_others = [i for i in others if i in warm]
+        pool = warm_others or others
+        expected = min(pool, key=lambda i: costs[i])
+        assert region.selected == {"i": expected}
