@@ -1,0 +1,83 @@
+"""Serve latency under a mixed prefill/decode trace, with and without
+background traffic-class tuning (docs/serving.md).
+
+Three servers replay the same deterministic mixed trace:
+
+* ``inline``     — tuning on the hot path: the first batch of every unseen
+  traffic class pays the full search cost in its own latency (the old
+  behaviour, the paper's before-execution AT run synchronously).
+* ``background`` — unseen classes tune on the worker thread while the hot
+  path serves the precompiled default; the replay after drain shows the
+  steady state with every class hot-swapped to its winner.
+* ``untuned``    — no tuning at all (default candidate forever), the floor.
+
+Rows report p50/p99 per-batch latency; ``derived`` carries the hot-path
+cost-evaluation count — the acceptance bar is that background serving shows
+``hot_evals=0`` in every phase.
+"""
+from __future__ import annotations
+
+from .common import FAST, emit
+
+
+def _percentiles(server) -> tuple:
+    return (
+        server.stats.latency_percentile(50),
+        server.stats.latency_percentile(99),
+    )
+
+
+def run() -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import mixed_traffic_trace
+    from repro.models import init_params, param_specs
+    from repro.runtime import BackgroundTuner, Server
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
+    n = 8 if FAST else 16
+    scale = 0.5 if FAST else 1.0
+    trace = mixed_traffic_trace(cfg, n, seed=7, scale=scale)
+
+    def report(tag: str, server, extra: str = "") -> None:
+        p50, p99 = _percentiles(server)
+        derived = f"hot_evals={server.hot_path_cost_evaluations}"
+        if extra:
+            derived += f";{extra}"
+        emit(f"serve_traffic_{tag}_p50", p50, derived)
+        emit(f"serve_traffic_{tag}_p99", p99, derived)
+
+    # Floor: no tuning anywhere, default degree forever.
+    untuned = Server(cfg, params, batch_size=2)
+    untuned.run(trace)
+    report("untuned", untuned)
+
+    # Baseline: tuning cost paid inside request latency.
+    inline = Server(cfg, params, batch_size=2, inline_tune=True)
+    inline.run(trace)
+    report("inline_cold", inline)
+    inline.stats.batch_latencies.clear()
+    inline.run(trace)
+    report("inline_warm", inline)
+
+    # Background: hot path never tunes; steady state after drain is all-tuned.
+    with BackgroundTuner() as tuner:
+        bg = Server(cfg, params, batch_size=2, background_tuner=tuner)
+        bg.run(trace)
+        report("background_cold", bg, extra=f"pending={tuner.pending}")
+        tuner.drain(timeout=600)
+        bg.stats.batch_latencies.clear()
+        bg.run(trace)
+        report(
+            "background_warm", bg,
+            extra=(
+                f"tuned_classes={len(tuner.tuned_labels)}"
+                f";bg_evals={tuner.background_evaluations}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,10 @@ import jax
 
 FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
 
+# Every emit() lands here too, so run.py can write the machine-readable
+# BENCH_*.json perf record next to the human CSV on stdout.
+RESULTS = []
+
 
 def time_call(fn, *args, warmup=1, repeats=3):
     """Best-of wall time in seconds (paper methodology: many iterations,
@@ -25,4 +29,5 @@ def time_call(fn, *args, warmup=1, repeats=3):
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "us_per_call": seconds * 1e6, "derived": derived})
     print(f"{name},{seconds * 1e6:.1f},{derived}")

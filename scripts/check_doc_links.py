@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Verify that documentation cross-links resolve.
+
+Checks, over README.md and docs/*.md:
+
+* every relative markdown link ``[text](target)`` points at a file that
+  exists (anchors after ``#`` are stripped; absolute URLs are skipped);
+* every ``docs/design.md §N`` reference in docs/ and src/ names a section
+  heading that actually exists in docs/design.md (the class of dangling
+  reference this script was added to prevent).
+
+Exits non-zero listing every broken link.  CI runs this; so does
+tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_REF_RE = re.compile(r"design\.md\s+§(\d+)")
+
+
+def doc_files() -> list:
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def check_markdown_links() -> list:
+    broken = []
+    for md in doc_files():
+        if not md.exists():
+            continue
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1).split("#")[0]
+            if not target or "://" in target or target.startswith("mailto:"):
+                continue
+            if not (md.parent / target).exists():
+                broken.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return broken
+
+
+def check_design_section_refs() -> list:
+    design = ROOT / "docs" / "design.md"
+    if not design.exists():
+        return ["docs/design.md does not exist"]
+    sections = set(re.findall(r"^##\s+§(\d+)", design.read_text(), re.MULTILINE))
+    broken = []
+    sources = [
+        *doc_files(),
+        *sorted((ROOT / "src").rglob("*.py")),
+        *sorted((ROOT / "tests").glob("*.py")),
+    ]
+    for path in sources:
+        for m in SECTION_REF_RE.finditer(path.read_text()):
+            if m.group(1) not in sections:
+                broken.append(
+                    f"{path.relative_to(ROOT)}: dangling reference to "
+                    f"design.md §{m.group(1)} (have §{sorted(sections)})"
+                )
+    return broken
+
+
+def main() -> int:
+    broken = check_markdown_links() + check_design_section_refs()
+    for b in broken:
+        print(b, file=sys.stderr)
+    if broken:
+        print(f"{len(broken)} broken doc link(s)", file=sys.stderr)
+        return 1
+    print(f"doc links OK across {len(doc_files())} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

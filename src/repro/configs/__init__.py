@@ -2,7 +2,7 @@
 
 Every arch module exports ``FULL`` (the exact published config) and ``SMOKE``
 (a reduced same-family config for CPU tests).  Shape cells follow the
-assignment; skip rules (DESIGN.md §4): ``long_500k`` only for sub-quadratic
+assignment; skip rules (docs/design.md §4): ``long_500k`` only for sub-quadratic
 families (ssm, hybrid).
 """
 from __future__ import annotations

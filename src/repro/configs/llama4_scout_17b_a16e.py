@@ -1,7 +1,7 @@
 """llama4-scout-17b-a16e — MoE 16 experts top-1 [hf:meta-llama/Llama-4-Scout-17B-16E].
 
 Text backbone only (the early-fusion image frontend is out of scope for the
-LM shape cells; DESIGN.md §4)."""
+LM shape cells; docs/design.md §4)."""
 from repro.models.config import ModelConfig
 
 FULL = ModelConfig(

@@ -58,6 +58,7 @@ from .search import (
     SuccessiveHalving,
     Trial,
 )
+from .traffic import PHASES, TrafficClass, bucket_pow2
 from .tuner import Tuner, RuntimeSelector
 
 __all__ = [
@@ -80,6 +81,9 @@ __all__ = [
     "enumerate_exchange_variants",
     "GKV_FIGURE_OF_VARIANT",
     "DegreeController",
+    "TrafficClass",
+    "PHASES",
+    "bucket_pow2",
     "Tuner",
     "RuntimeSelector",
     "TuningDB",

@@ -22,6 +22,7 @@ The life of a call ``autotuned("flash_attention")(q, k, v)``:
 from __future__ import annotations
 
 import json
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional
@@ -33,6 +34,7 @@ from .params import BasicParams
 from .region import ATRegion
 from .registry import KernelSpec
 from .search import Search
+from .traffic import TrafficClass
 from .tuner import RuntimeSelector, Tuner
 
 
@@ -51,6 +53,8 @@ class OpState:
     from_cache: bool = False      # selection came from the DB, zero evals
     cost_evaluations: int = 0
     warmed: int = 0
+    traffic: Optional[TrafficClass] = None  # set when the spec buckets traffic
+    tune_thread: Optional[int] = None       # ident of the thread that tuned
 
 
 class AutotunedOp:
@@ -90,6 +94,8 @@ class AutotunedOp:
         self.window = window
         self.cost_factory = cost_factory or spec.cost_factory
         self._states: Dict[str, OpState] = {}
+        self._state_lock = threading.Lock()  # guards the two dicts below
+        self._build_locks: Dict[str, threading.Lock] = {}
 
     # -- public --------------------------------------------------------------
 
@@ -114,38 +120,99 @@ class AutotunedOp:
 
     def resolve(self, *args: Any, **kwargs: Any) -> OpState:
         """The op's state for this call's shape class, tuning if needed."""
+        return self._resolve(args, kwargs, self.tune)
+
+    def resolve_deferred(self, *args: Any, **kwargs: Any) -> OpState:
+        """Resolve without ever tuning on the calling thread.
+
+        The background-tuner entry: a DB hit still selects the tuned winner,
+        a miss returns the safe default for someone else to tune later.
+        Unlike toggling ``self.tune`` around ``resolve``, this is safe under
+        concurrent callers.
+        """
+        return self._resolve(args, kwargs, False)
+
+    def _resolve(self, args: tuple, kwargs: dict, tune: bool) -> OpState:
         bp = self.spec.shape_class(*args, **kwargs)
+        traffic = None
+        if self.spec.traffic_class is not None:
+            traffic = self.spec.traffic_class(*args, **kwargs)
+            bp = bp.with_entries(**traffic.bp_entries())
         fp = bp.fingerprint()
-        state = self._states.get(fp)
-        if state is not None:
+        # one canonical state per shape class even under concurrent callers:
+        # a losing racer must not build (and possibly tune) a duplicate that
+        # the background tuner would then hot-swap into the void.  The build
+        # runs under a per-fingerprint lock so an inline tune of one class
+        # never blocks resolution of another.
+        with self._state_lock:
+            state = self._states.get(fp)
+            if state is not None:
+                return state
+            build_lock = self._build_locks.setdefault(fp, threading.Lock())
+        with build_lock:
+            with self._state_lock:
+                state = self._states.get(fp)
+            if state is not None:
+                return state
+            state = self._build_state(bp, args, kwargs, tune)
+            state.traffic = traffic
+            with self._state_lock:
+                self._states[fp] = state
             return state
-        state = self._build_state(bp, args, kwargs)
-        self._states[fp] = state
-        return state
 
     def select(self, point: Mapping[str, Any], *args: Any, **kwargs: Any) -> OpState:
         """Pin a PP point for this shape class (bypasses tuning)."""
-        tune, self.tune = self.tune, False
-        try:
-            state = self.resolve(*args, **kwargs)
-        finally:
-            self.tune = tune
+        state = self.resolve_deferred(*args, **kwargs)
         state.region.select(point)
         return state
 
     def states(self) -> Dict[str, OpState]:
         return dict(self._states)
 
+    def tune_state(self, state: OpState, args: tuple, kwargs: dict) -> OpState:
+        """Run deferred tuning for an already-resolved state.
+
+        This is the background-tuner entry point: ``resolve_deferred`` hands
+        out a state serving the region's safe default, and a worker thread
+        later calls this to search, warm the top-k, and hot-swap the
+        region's selection — the serve hot path never pays a cost
+        evaluation.  Ordering matters: the search runs with ``select=False``
+        so the hot path keeps serving the (already compiled) default while
+        we warm — selecting the winner before it is compiled would hand a
+        concurrent request its trace/compile cost.  Only once the winner is
+        warm does ``region.select`` swap it in.  Warming happens here
+        regardless of ``self.warm`` (we are off the hot path by
+        construction), and the selector is rebuilt because its ranking was
+        computed before any trials existed.
+        """
+        if state.tuned or state.from_cache:
+            return state
+        winner = self._tune(state, args, kwargs, select=False)
+        state.warmed = self._warm_topk(state, args, kwargs)
+        if (args or kwargs) and dict(winner) == dict(state.region.selected):
+            # winner == the live default: _warm_topk skipped executing it
+            # ("about to run for real" — true inline, false here), so pay
+            # any residual compile on this worker thread
+            jax.block_until_ready(state.region.candidate(winner)(*args, **kwargs))
+        state.region.select(winner)  # the hot swap: winner is warm by now
+        state.selector = RuntimeSelector(
+            state.region, state.bp, self.db,
+            tolerance=self.tolerance, window=self.window,
+        )
+        return state
+
     # -- internals -----------------------------------------------------------
 
-    def _build_state(self, bp: BasicParams, args: tuple, kwargs: dict) -> OpState:
+    def _build_state(
+        self, bp: BasicParams, args: tuple, kwargs: dict, tune: bool
+    ) -> OpState:
         region = self.spec.make_region(bp)
         state = OpState(bp=bp, region=region)
         tuned = self.db.tuned_point(bp)
         if tuned is not None:
             region.select(tuned)
             state.from_cache = True
-        elif self.tune:
+        elif tune:
             self._tune(state, args, kwargs)
         if self.warm:
             state.warmed = self._warm_topk(state, args, kwargs)
@@ -154,7 +221,14 @@ class AutotunedOp:
         )
         return state
 
-    def _tune(self, state: OpState, args: tuple, kwargs: dict) -> None:
+    def _tune(
+        self, state: OpState, args: tuple, kwargs: dict, select: bool = True
+    ) -> Dict[str, Any]:
+        """Search this state's PP space; returns the winning point.
+
+        ``select=False`` leaves the region's live selection untouched (the
+        background path swaps only after warming the winner).
+        """
         region, bp = state.region, state.bp
         if self.cost_factory is not None:
             cost = self.cost_factory(region, bp, args, kwargs)
@@ -172,7 +246,7 @@ class AutotunedOp:
 
         tuner = Tuner(self.db, self.search) if self.search else Tuner(self.db)
         try:
-            tuner.tune(region, bp, budgeted)
+            winner = dict(tuner.tune(region, bp, budgeted, select=select).best.point)
         except TrialBudgetExhausted:
             # Budget hit mid-search: select the argmin over what we measured,
             # but do NOT record a DB best — only a completed search is final,
@@ -185,8 +259,12 @@ class AutotunedOp:
                     "allowed no evaluations"
                 ) from None
             best_key = min(trials, key=trials.get)
-            region.select(json.loads(best_key))
+            winner = json.loads(best_key)
+            if select:
+                region.select(winner)
         state.tuned = True
+        state.tune_thread = threading.get_ident()
+        return winner
 
     def _warm_topk(self, state: OpState, args: tuple, kwargs: dict) -> int:
         """Materialize the k best candidates so switching never compiles."""

@@ -41,6 +41,14 @@ from .params import BasicParams, pp_key
 
 SCHEMA_VERSION = 2
 
+# Run-time observations are telemetry, not results: keep a bounded window
+# per entry and flush them to disk only every Nth record, so a long-running
+# server's per-group observe() neither grows the file without bound nor
+# pays a full-DB rewrite on its hot path.  Trials/bests still flush on
+# every write (losing one would lose a search result).
+HISTORY_LIMIT = 256
+RUNTIME_FLUSH_EVERY = 16
+
 
 class TuningDB:
     SCHEMA_VERSION = SCHEMA_VERSION
@@ -50,6 +58,7 @@ class TuningDB:
         self._lock = threading.Lock()
         self._data: Dict[str, Dict[str, Any]] = {}
         self._disk_sig: Optional[Tuple[int, int]] = None
+        self._runtime_obs = 0
         if path and os.path.exists(path):
             self._data = self._read_file(path)
             self._disk_sig = self._file_sig(path)
@@ -117,13 +126,21 @@ class TuningDB:
     def record_runtime_observation(
         self, bp: BasicParams, point: Mapping[str, Any], cost: float
     ) -> None:
-        """Run-time layer: append a measured (point, cost) observation."""
+        """Run-time layer: append a measured (point, cost) observation.
+
+        History is a bounded window (``HISTORY_LIMIT``) flushed every
+        ``RUNTIME_FLUSH_EVERY`` records — observations are telemetry, and a
+        crash losing a few of them is harmless, unlike trials/bests.
+        """
         with self._lock:
             entry = self._entry(bp, "run_time")
-            entry.setdefault("history", []).append(
-                {"point": dict(point), "cost": cost}
-            )
-            self._flush()
+            hist = entry.setdefault("history", [])
+            hist.append({"point": dict(point), "cost": cost})
+            if len(hist) > HISTORY_LIMIT:
+                del hist[: len(hist) - HISTORY_LIMIT]
+            self._runtime_obs += 1
+            if self._runtime_obs % RUNTIME_FLUSH_EVERY == 0:
+                self._flush()
 
     # -- read ----------------------------------------------------------------
 
@@ -163,6 +180,38 @@ class TuningDB:
 
     def fingerprints(self) -> list:
         return list(self._data)
+
+    def entries_matching(self, **bp_filter: Any) -> Dict[str, Dict[str, Any]]:
+        """Entries whose BP echo matches every given ``key=value``.
+
+        This is the query surface that makes composed BP dimensions —
+        traffic class, mesh fingerprint — first-class: e.g.
+        ``db.entries_matching(phase="prefill", mesh="data2xmodel2")``.
+        """
+        out: Dict[str, Dict[str, Any]] = {}
+        with self._lock:
+            for fp, entry in self._data.items():
+                bp = entry.get("bp", {})
+                if all(bp.get(k) == v for k, v in bp_filter.items()):
+                    out[fp] = json.loads(json.dumps(entry))
+        return out
+
+    def traffic_classes(self) -> list:
+        """Distinct serving traffic classes present in the DB, sorted by label.
+
+        Scans BP echoes for the :meth:`TrafficClass.bp_entries` keys; entries
+        without them (plain kernels) are skipped.
+        """
+        from .traffic import TrafficClass
+
+        seen: Dict[str, Any] = {}
+        with self._lock:
+            for entry in self._data.values():
+                bp = entry.get("bp", {})
+                if all(k in bp for k in TrafficClass.BP_KEYS):
+                    tc = TrafficClass.from_bp_entries(bp)
+                    seen[tc.label] = tc
+        return [seen[k] for k in sorted(seen)]
 
     # -- internals -------------------------------------------------------------
 

@@ -8,7 +8,7 @@ The paper's generated subroutines do::
     call omp_set_num_threads ( 32 )          ! restore user maximum, on exit
 
 On TPU the device count is fixed per program, so "number of threads" is
-reinterpreted (see DESIGN.md §2) as the **grain of parallelism at fixed
+reinterpreted (see docs/design.md §2) as the **grain of parallelism at fixed
 device count**: Pallas grid size for kernels, chunk counts for collectives,
 microbatch count for gradient accumulation.  What carries over exactly is
 the *protocol*: a region-scoped degree that is set on entry and restored on

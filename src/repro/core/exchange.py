@@ -26,7 +26,7 @@ JAX realization of one variant ``(m, j)`` with parallelism degree ``d``
   vectorization here);
 * loops **below** the directive are fully vectorized inside the body block
   (collapse becomes a reshape — free under XLA, unlike the Fortran div/mod
-  index reconstruction; recorded as an assumption change in DESIGN.md).
+  index reconstruction; recorded as an assumption change in docs/design.md §7).
 
 The same (m, j, d) family drives the Pallas kernel's (grid, BlockSpec)
 candidates in :mod:`repro.kernels.exb` — grid = outer×chunks, block = chunk

@@ -58,6 +58,17 @@ class BasicParams:
     def asdict(self) -> Dict[str, Any]:
         return dict(self.entries)
 
+    def with_entries(self, **extra: Any) -> "BasicParams":
+        """A new BP with ``extra`` merged in (later keys win).
+
+        This is how orthogonal BP dimensions compose: a kernel's shape class
+        extended with its traffic class and mesh fingerprint stays one flat,
+        fingerprintable key.
+        """
+        merged = dict(self.entries)
+        merged.update(extra)
+        return BasicParams.make(**merged)
+
     def fingerprint(self) -> str:
         """Stable hash used as the tuning-database key."""
         blob = json.dumps(self.entries, sort_keys=True, default=str)

@@ -37,6 +37,7 @@ from .db import TuningDB
 from .params import BasicParams
 from .region import ATRegion
 from .search import Search
+from .traffic import TrafficClass
 
 
 @dataclass(frozen=True)
@@ -50,6 +51,10 @@ class KernelSpec:
     ``cost_factory(region, bp, args, kwargs)``, when given, returns the cost
     function the tuner minimizes (e.g. an analytic model for install-time AT
     on a host without the target hardware); the default is wall-clock.
+    ``traffic_class(*args, **kwargs)``, when given, maps the call to a
+    :class:`~repro.core.traffic.TrafficClass`; its entries extend the shape
+    class BP, so each traffic class tunes — and hot-swaps — independently
+    (docs/serving.md).
     """
 
     name: str
@@ -59,6 +64,7 @@ class KernelSpec:
         Callable[[ATRegion, BasicParams, tuple, dict], Callable[[Mapping[str, Any]], float]]
     ] = None
     tags: Tuple[str, ...] = ()
+    traffic_class: Optional[Callable[..., "TrafficClass"]] = None
 
 
 class Registry:

@@ -1,3 +1,13 @@
-from .pipeline import SyntheticLMDataset, ServingRequest, synthetic_requests
+from .pipeline import (
+    SyntheticLMDataset,
+    ServingRequest,
+    mixed_traffic_trace,
+    synthetic_requests,
+)
 
-__all__ = ["SyntheticLMDataset", "ServingRequest", "synthetic_requests"]
+__all__ = [
+    "SyntheticLMDataset",
+    "ServingRequest",
+    "mixed_traffic_trace",
+    "synthetic_requests",
+]

@@ -121,3 +121,39 @@ def synthetic_requests(
         p = rng.integers(0, cfg.vocab_size - 1, size=prompt_len).astype(np.int32)
         out.append(ServingRequest(rid=i, prompt=p, max_new_tokens=max_new_tokens))
     return out
+
+
+# (profile name, prompt-length range, new-token range): a prefill-heavy mode
+# (long prompt, short completion), a decode-heavy mode (short prompt, long
+# completion), and a balanced middle — the mix a real endpoint sees, and the
+# load shape the traffic-class tuner (docs/serving.md) buckets.
+_TRACE_MODES = (
+    ("prefill_heavy", (48, 96), (2, 6)),
+    ("decode_heavy", (4, 12), (16, 48)),
+    ("balanced", (16, 32), (8, 16)),
+)
+
+
+def mixed_traffic_trace(
+    cfg: ModelConfig,
+    n: int,
+    seed: int = 0,
+    scale: float = 1.0,
+) -> List[ServingRequest]:
+    """A deterministic mixed prefill/decode request trace.
+
+    Interleaves prefill-heavy, decode-heavy, and balanced requests so a
+    server sees several distinct traffic classes in one pass.  ``scale``
+    multiplies all lengths (e.g. 0.25 for fast CI smoke runs).
+    """
+    rng = np.random.default_rng(seed)
+    out: List[ServingRequest] = []
+    for i in range(n):
+        _, (p_lo, p_hi), (t_lo, t_hi) = _TRACE_MODES[
+            int(rng.integers(0, len(_TRACE_MODES)))
+        ]
+        plen = max(1, int(rng.integers(p_lo, p_hi + 1) * scale))
+        new = max(1, int(rng.integers(t_lo, t_hi + 1) * scale))
+        prompt = rng.integers(0, cfg.vocab_size - 1, size=plen).astype(np.int32)
+        out.append(ServingRequest(rid=i, prompt=prompt, max_new_tokens=new))
+    return out

@@ -6,6 +6,8 @@ from .sharding import (
     constrain,
     current_rule,
     logical_to_spec,
+    mesh_bp_entries,
+    mesh_fingerprint,
     opt_state_sharding,
     param_sharding,
     spec_for,
@@ -19,6 +21,8 @@ __all__ = [
     "constrain",
     "current_rule",
     "logical_to_spec",
+    "mesh_bp_entries",
+    "mesh_fingerprint",
     "opt_state_sharding",
     "param_sharding",
     "spec_for",

@@ -5,7 +5,7 @@ activations carry *logical* axis names.  A :class:`ShardingRule` maps logical
 names to mesh axes; applying a rule yields ``PartitionSpec`` s.  Because the
 rule is an ordinary value, the before-execution tuner searches over rules the
 same way the paper searches over loop variants — sharding layout is our
-"directive position" at the distributed level (DESIGN.md §2).
+"directive position" at the distributed level (docs/design.md §2).
 
 Divisibility guard: a dimension is only sharded if its size divides the mesh
 axis product; otherwise that axis silently stays replicated (e.g. 8 KV heads
@@ -134,6 +134,32 @@ def activation_sharding(mesh: Mesh, rule: ShardingRule):
 def current_rule() -> Optional[ShardingRule]:
     ctx = _ACTIVE.get()
     return ctx[1] if ctx else None
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]) -> str:
+    """Canonical string for a mesh factorization, e.g. ``"data2xmodel4"``.
+
+    ``"host"`` when no mesh is given (single-host, unsharded serving).
+    """
+    if mesh is None:
+        return "host"
+    return "x".join(f"{a}{n}" for a, n in mesh.shape.items())
+
+
+def mesh_bp_entries(mesh: Optional[Mesh] = None) -> Dict[str, str]:
+    """BP entries keying tuned results to the mesh shape.
+
+    A tuned winner is only valid under the factorization it was measured on
+    — resharding from (data=16, model=16) to (data=32, model=8) changes
+    collective paths and per-shard shapes, so each factorization gets its
+    own TuningDB entries instead of silently reusing a stale winner.  When
+    ``mesh`` is omitted, the mesh from the active :func:`activation_sharding`
+    context (if any) is used.
+    """
+    if mesh is None:
+        ctx = _ACTIVE.get()
+        mesh = ctx[0] if ctx else None
+    return {"mesh": mesh_fingerprint(mesh)}
 
 
 def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:

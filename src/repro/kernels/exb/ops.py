@@ -3,7 +3,7 @@
 ``exb_region()`` brackets the kernel's (block_iv, block_iz) family exactly
 like the paper brackets the Fortran loop nest — same ParamSpace machinery,
 with a VMEM-feasibility constraint standing in for "enough iterations per
-thread" (DESIGN.md §2), and an analytic cost model for install-time AT on a
+thread" (docs/design.md §2), and an analytic cost model for install-time AT on a
 host without the target hardware.
 """
 from __future__ import annotations

@@ -1,7 +1,7 @@
 """Pure-jnp oracle for the GKV exb kernel (split re/im layout).
 
 The TPU adaptation UNPACKS the Fortran complex packing into separate
-float32 planes (DESIGN.md §2): the original cmplx() trick packs two
+float32 planes (docs/design.md §2): the original cmplx() trick packs two
 independent real fields; on TPU separate planes vectorize on the VPU
 without complex emulation, and the 3-D fields stay 3-D (the iv broadcast
 happens through BlockSpec index maps, not materialized memory).

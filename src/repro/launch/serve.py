@@ -1,6 +1,12 @@
 """Production serve CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b
+
+``--trace mixed`` replays a mixed prefill/decode trace through the
+traffic-class autotuner (docs/serving.md): unseen classes tune on the
+background worker while the hot path serves the precompiled default, then
+hot-swap to the tuned winner.  ``--inline-tune`` instead tunes on the hot
+path (the latency-comparison baseline); the default performs no tuning.
 """
 import argparse
 
@@ -9,26 +15,69 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument(
+        "--batch-size", type=int, default=None,
+        help="serve batch width (default: min(4, requests))",
+    )
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--trace", choices=("uniform", "mixed"), default="uniform",
+        help="uniform: identical requests; mixed: prefill/decode-heavy mix",
+    )
+    tune_mode = ap.add_mutually_exclusive_group()
+    tune_mode.add_argument(
+        "--background-tune", action="store_true",
+        help="tune unseen traffic classes on a background worker",
+    )
+    tune_mode.add_argument(
+        "--inline-tune", action="store_true",
+        help="tune unseen traffic classes on the hot path (baseline)",
+    )
+    ap.add_argument("--tuning-db", default=None, help="persistent TuningDB path")
     args = ap.parse_args()
 
     import jax
 
     from repro.configs import get_config
-    from repro.data import synthetic_requests
+    from repro.core import TuningDB
+    from repro.data import mixed_traffic_trace, synthetic_requests
     from repro.models import init_params, param_specs
-    from repro.runtime import Server
+    from repro.runtime import BackgroundTuner, Server
 
     cfg = get_config(args.arch, smoke=not args.full)
     params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
-    server = Server(cfg, params, batch_size=args.requests)
-    out = server.run(
-        synthetic_requests(cfg, args.requests, args.prompt_len, args.new_tokens)
+    if args.trace == "mixed":
+        requests = mixed_traffic_trace(cfg, args.requests)
+    else:
+        requests = synthetic_requests(
+            cfg, args.requests, args.prompt_len, args.new_tokens
+        )
+
+    tuner = BackgroundTuner() if args.background_tune else None
+    server = Server(
+        cfg,
+        params,
+        batch_size=args.batch_size or min(4, args.requests),
+        tuning_db=TuningDB(args.tuning_db) if args.tuning_db else None,
+        background_tuner=tuner,
+        inline_tune=args.inline_tune,
     )
+    out = server.run(requests)
     print(f"served {len(out)} requests, {server.stats.tokens_out} tokens, "
           f"{server.stats.decode_tok_per_s:.1f} tok/s")
+    print(f"traffic classes: {', '.join(server.traffic_classes_seen) or '-'}")
+    print(f"hot-path tuning evaluations: {server.hot_path_cost_evaluations}")
+    if tuner is not None:
+        drained = tuner.drain(timeout=300)
+        tuner.stop()
+        print(f"background-tuned classes: {', '.join(tuner.tuned_labels) or '-'} "
+              f"({tuner.background_evaluations} evaluations off the hot path)")
+        if not drained:
+            print("WARNING: background tuning did not drain within 300s")
+        for label, err in tuner.errors:
+            print(f"WARNING: background tuning failed for {label}: {err!r}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,7 @@ from .config import ModelConfig
 from .model import (
     analytic_param_count,
     analytic_step_flops,
+    cache_batch_axis,
     decode_fn,
     init_cache,
     input_logical_axes,
@@ -33,6 +34,7 @@ __all__ = [
     "make_concrete_batch",
     "analytic_param_count",
     "analytic_step_flops",
+    "cache_batch_axis",
     "as_shape_dtype_structs",
     "count_params",
     "init_params",

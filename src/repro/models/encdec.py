@@ -6,7 +6,7 @@ encoder is the 32-layer bidirectional transformer over those frames with a
 learned positional table.  The decoder is a causal transformer with
 cross-attention; decoder positions are sinusoidal (deviation from Whisper's
 learned table so that parameter shapes stay independent of the assigned
-sequence lengths — recorded in DESIGN.md).  Embeddings are tied (as Whisper).
+sequence lengths — recorded in docs/design.md §7).  Embeddings are tied (as Whisper).
 """
 from __future__ import annotations
 

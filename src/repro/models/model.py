@@ -291,6 +291,16 @@ def _cache_leaf_axes(key: str, rank: int):
     return (None,) * rank
 
 
+def cache_batch_axis(key: str, rank: int) -> Optional[int]:
+    """Index of the batch axis in one decode-cache leaf, or None for shared
+    scalars ("len").  Batch position varies by leaf — stacked per-layer
+    leaves are (layers, B, ...), hybrid tail-layer leaves are (B, ...) — and
+    this is the authority serving's chunked-degree candidates use to
+    split/concat the cache (repro.runtime.serve)."""
+    axes = _cache_leaf_axes(key, rank)
+    return axes.index("batch") if "batch" in axes else None
+
+
 def input_logical_axes(cfg: ModelConfig, kind: str, specs: Dict[str, Any]):
     """Logical axis names for every leaf of :func:`input_specs` output —
     the dry-run turns these into NamedShardings via the active rule."""

@@ -3,7 +3,7 @@ distributed-optimization PPs:
 
 * ``moment_dtype`` — fp32 (default) or bf16 second moments ("gradient
   compression" family; halves optimizer HBM, the fix that lets llama3-405b
-  train_4k approach one pod, DESIGN.md §6),
+  train_4k approach one pod, docs/design.md §6),
 * ZeRO-1 state sharding is *not* done here — it is purely a sharding-rule
   concern (:func:`repro.distributed.sharding.opt_state_sharding`); the math
   below is sharding-oblivious, pjit moves the bytes.

@@ -1,4 +1,12 @@
 from .train import TrainLoopConfig, Trainer, SimulatedFailure
-from .serve import Server
+from .serve import Server, ServeStats
+from .background_tuner import BackgroundTuner
 
-__all__ = ["TrainLoopConfig", "Trainer", "SimulatedFailure", "Server"]
+__all__ = [
+    "TrainLoopConfig",
+    "Trainer",
+    "SimulatedFailure",
+    "Server",
+    "ServeStats",
+    "BackgroundTuner",
+]

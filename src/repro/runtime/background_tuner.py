@@ -1,0 +1,174 @@
+"""Off-hot-path tuning orchestrator for serving traffic classes.
+
+The paper tunes at install / before-execution time precisely so the run-time
+layer never pays search cost.  A server cannot stop the world for
+before-execution AT when an unseen traffic class arrives, so this module
+moves that layer onto a worker thread:
+
+1. the serve loop calls :meth:`BackgroundTuner.submit` for every batch — a
+   shape-class/DB lookup only, **never** a cost evaluation;
+2. an unseen class is enqueued once (deduplicated by BP fingerprint) and the
+   caller keeps serving the region's safe precompiled default;
+3. the worker pops the job, runs the op's search on the captured example
+   arguments (:meth:`~repro.core.autotuned.AutotunedOp.tune_state`), warms
+   the top-k candidates, and the winner lands via ``region.select`` — the
+   same set-on-entry/restore-on-exit switch the
+   :class:`~repro.core.tuner.RuntimeSelector` and
+   :class:`~repro.core.degree.DegreeController` use, so the hot swap is a
+   dict-lookup away from the next request, with zero compilation.
+
+An optional ``on_complete`` callback lets the server mirror the tuned
+degree into its :class:`~repro.core.degree.DegreeController` (the
+``omp_set_num_threads`` bookkeeping) the moment a winner lands.
+
+See docs/serving.md for the full lifecycle.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.autotuned import AutotunedOp, OpState
+
+
+@dataclass
+class TuneJob:
+    op: AutotunedOp
+    state: OpState
+    args: tuple
+    kwargs: dict
+    label: str
+    on_complete: Optional[Callable[[OpState], None]] = None
+
+
+class BackgroundTuner:
+    """Worker thread + queue that runs before-execution AT off the hot path."""
+
+    def __init__(self, name: str = "repro-background-tuner") -> None:
+        self.name = name
+        self._queue: "queue.Queue[Optional[TuneJob]]" = queue.Queue()
+        self._cv = threading.Condition()
+        self._inflight: set = set()  # BP fingerprints queued or tuning now
+        self._failed: Dict[str, str] = {}  # fp -> label, search raised
+        self._thread: Optional[threading.Thread] = None
+        self.completed: List[Tuple[str, OpState]] = []
+        self.errors: List[Tuple[str, BaseException]] = []
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "BackgroundTuner":
+        with self._cv:  # two racing first-submits must not spawn two workers
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._worker, name=self.name, daemon=True
+                )
+                self._thread.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        with self._cv:
+            thread = self._thread
+        if thread is not None and thread.is_alive():
+            self._queue.put(None)
+            thread.join(timeout)
+            if thread.is_alive():
+                # still draining a long tune: keep the handle so a later
+                # start() cannot spawn a second worker on the same queue
+                return
+        with self._cv:
+            if self._thread is thread:
+                self._thread = None
+
+    def __enter__(self) -> "BackgroundTuner":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    # -- the serve-loop API --------------------------------------------------
+
+    def submit(
+        self,
+        op: AutotunedOp,
+        *args: Any,
+        on_complete: Optional[Callable[[OpState], None]] = None,
+        **kwargs: Any,
+    ) -> OpState:
+        """Resolve the call's shape class without tuning; queue tuning if new.
+
+        Returns the state immediately — selected at the tuned winner when the
+        DB already has one, at the safe default otherwise.  The caller's
+        thread performs zero cost evaluations regardless of the op's ``tune``
+        flag (``resolve_deferred`` never tunes).  A class whose search raised
+        is not retried — it keeps serving the default and stays listed in
+        :attr:`errors` / :attr:`failed_labels` for the operator.
+        """
+        self.start()
+        state = op.resolve_deferred(*args, **kwargs)
+        if state.tuned or state.from_cache:
+            return state
+        fp = state.bp.fingerprint()
+        with self._cv:
+            if fp in self._inflight or fp in self._failed:
+                return state
+            self._inflight.add(fp)
+        label = state.traffic.label if state.traffic else op.spec.name
+        self._queue.put(TuneJob(op, state, args, kwargs, label, on_complete))
+        return state
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every queued class is tuned; False on timeout."""
+        with self._cv:
+            return self._cv.wait_for(lambda: not self._inflight, timeout)
+
+    @property
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._inflight)
+
+    @property
+    def tuned_labels(self) -> List[str]:
+        return [label for label, _ in self.completed]
+
+    @property
+    def failed_labels(self) -> List[str]:
+        """Classes whose *search* failed — permanently serving the default.
+
+        (:attr:`errors` can additionally hold ``on_complete`` callback
+        exceptions; those classes are tuned and not listed here.)
+        """
+        with self._cv:
+            return sorted(self._failed.values())
+
+    @property
+    def background_evaluations(self) -> int:
+        """Cost evaluations this tuner ran — all of them off the hot path."""
+        return sum(state.cost_evaluations for _, state in self.completed)
+
+    # -- worker --------------------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            fp = job.state.bp.fingerprint()
+            try:
+                job.op.tune_state(job.state, job.args, job.kwargs)
+            except BaseException as e:  # a bad class must not kill the worker
+                self.errors.append((job.label, e))
+                with self._cv:  # never retried: submit() skips failed classes
+                    self._failed[fp] = job.label
+            else:
+                self.completed.append((job.label, job.state))
+                if job.on_complete is not None:
+                    try:  # a callback bug is an error, not a failed tune
+                        job.on_complete(job.state)
+                    except BaseException as e:
+                        self.errors.append((job.label, e))
+            finally:
+                with self._cv:
+                    self._inflight.discard(fp)
+                    self._cv.notify_all()

@@ -1,19 +1,32 @@
-"""Batched serving loop: prefill + greedy decode with a KV/state cache.
+"""Batched serving loop with traffic-class autotuning (docs/serving.md).
 
 A deliberately small continuous-batching server: requests are grouped into
 fixed-size batches (padding prompts to a shared length), prefilled once, then
 decoded step-by-step.  Both the prefill and decode paths are registry ops
-(:mod:`repro.core.registry`), built once per (batch, length) shape class —
-serving-side AOT candidate generation, matching the paper's no-runtime-codegen
-discipline.  Their candidate families are single-point for now: every region
-candidate must be semantically identical (greedy outputs are part of the
-serving contract), and no output-preserving serving PP exists yet; traffic-
-class PPs land here once an attention-masked prefill makes padding free.
+(:mod:`repro.core.registry`) whose shape class is extended by a
+:class:`~repro.core.traffic.TrafficClass` — batch bucket × sequence bucket ×
+phase — and by the mesh fingerprint, so every traffic class on every mesh
+factorization tunes independently.
+
+The candidate family is the serving **degree**: the batch is split into
+``degree`` chunks executed sequentially and re-concatenated.  Rows are
+independent in every family except MoE (capacity-bounded dispatch couples
+the batch, so MoE serves degree 1 only), which makes every candidate
+semantically identical — the greedy-output serving contract holds across
+switches.  Degree trades peak activation memory against per-call launch
+overhead, the thread-grain trade of docs/design.md §2.
+
+Tuning never runs on the request hot path: pass a
+:class:`~repro.runtime.background_tuner.BackgroundTuner` and unseen classes
+are tuned on its worker thread while the hot path serves the safe
+precompiled default, hot-swapping to the winner when it lands.
+``inline_tune=True`` restores pay-as-you-go tuning (the benchmark baseline);
+the default is no tuning at all, exactly the pre-traffic-class behaviour.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -23,25 +36,72 @@ import numpy as np
 from repro.core import (
     AutotunedOp,
     BasicParams,
+    DegreeController,
     KernelSpec,
     ParamSpace,
     PerfParam,
+    TrafficClass,
     TuningDB,
     register_kernel,
 )
+from repro.core.autotuned import OpState
 from repro.data.pipeline import ServingRequest
-from repro.models import decode_fn, prefill_fn
+from repro.distributed.sharding import mesh_bp_entries
+from repro.models import cache_batch_axis, decode_fn, prefill_fn
 from repro.models.config import ModelConfig
+from repro.runtime.background_tuner import BackgroundTuner
+
 
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
+    batch_latencies: List[float] = field(default_factory=list)
 
     @property
     def decode_tok_per_s(self) -> float:
         return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile of per-batch wall time (seconds); 0 when empty."""
+        if not self.batch_latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.batch_latencies), q))
+
+
+# Which axis of each model input carries the batch dimension (positions is
+# (3, B, L): axis 1).  Cache leaves vary per name — stacked per-layer leaves
+# are (layers, B, ...), hybrid tail leaves are (B, ...) — so they go through
+# models.cache_batch_axis; scalars ("len") are shared across chunks.
+_BATCH_AXIS = {"tokens": 0, "vision_embeds": 0, "frames": 0, "positions": 1}
+
+
+def _slice_axis(x, axis: int, i: int, n: int):
+    size = x.shape[axis] // n
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(i * size, (i + 1) * size)
+    return x[tuple(idx)]
+
+
+def _batch_chunk(batch: Dict[str, Any], i: int, n: int) -> Dict[str, Any]:
+    return {k: _slice_axis(v, _BATCH_AXIS.get(k, 0), i, n) for k, v in batch.items()}
+
+
+def _cache_chunk(cache: Dict[str, Any], i: int, n: int) -> Dict[str, Any]:
+    out = {}
+    for k, v in cache.items():
+        ax = cache_batch_axis(k, getattr(v, "ndim", 0))
+        out[k] = v if ax is None else _slice_axis(v, ax, i, n)
+    return out
+
+
+def _cache_concat(chunks: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    out = {}
+    for k, v in chunks[0].items():
+        ax = cache_batch_axis(k, getattr(v, "ndim", 0))
+        out[k] = v if ax is None else jnp.concatenate([c[k] for c in chunks], axis=ax)
+    return out
 
 
 class Server:
@@ -52,71 +112,200 @@ class Server:
         batch_size: int = 4,
         max_len: int = 128,
         tuning_db: Optional[TuningDB] = None,
+        mesh: Any = None,
+        background_tuner: Optional[BackgroundTuner] = None,
+        inline_tune: bool = False,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.db = tuning_db or TuningDB()
+        self.mesh = mesh
+        self.background = background_tuner
+        self.inline_tune = inline_tune
+        self.degree = DegreeController(max_degree=batch_size)
         self._prefill = jax.jit(lambda p, b: prefill_fn(p, b, cfg))
         self._decode = jax.jit(lambda p, b, c: decode_fn(p, b, c, cfg))
         self.prefill_op = self._make_prefill_op()
         self.decode_op = self._make_decode_op()
         self.stats = ServeStats()
+        self._hot_tuned: set = set()  # fingerprints tuned inline on a serve call
+
+    # -- degree candidate family -----------------------------------------------
+
+    def _degree_domain(self) -> Tuple[int, ...]:
+        """Serving degrees: batch-chunk counts that keep outputs identical.
+
+        MoE capacity-bounded dispatch couples rows across the batch (which
+        tokens drop depends on the whole group), so MoE only ever serves the
+        whole batch at once.
+        """
+        if self.cfg.family == "moe":
+            return (1,)
+        return tuple(
+            d for d in (1, 2, 4) if d <= self.batch_size and self.batch_size % d == 0
+        )
+
+    def _degree_space(self) -> ParamSpace:
+        return ParamSpace([PerfParam("degree", self._degree_domain())])
 
     # -- registry ops ----------------------------------------------------------
 
     def _make_prefill_op(self) -> AutotunedOp:
-        cfg, prefill = self.cfg, self._prefill
+        cfg, prefill, mesh = self.cfg, self._prefill, self.mesh
 
         def instantiate(point):
-            return lambda params, batch: prefill(params, batch)
+            d = int(point.get("degree", 1))
+            if d == 1:
+                return lambda params, batch: prefill(params, batch)
+
+            def chunked(params, batch):
+                outs = [
+                    prefill(params, _batch_chunk(batch, i, d)) for i in range(d)
+                ]
+                logits = jnp.concatenate([o[0] for o in outs], axis=0)
+                return logits, _cache_concat([o[1] for o in outs])
+
+            return chunked
+
+        # the exact serving batch (not just the traffic bucket) is part of
+        # the key: the degree domain is "divisors of batch_size", so two
+        # servers whose batch sizes share a pow2 bucket must not share a
+        # tuned winner — a degree that doesn't divide the batch is invalid
+        batch_size = self.batch_size
 
         def shape_class(params, batch) -> BasicParams:
-            B, plen = batch["tokens"].shape
+            # mesh entries are computed per call, not baked at construction:
+            # with mesh=None the active activation_sharding context decides,
+            # so a resharded server keys fresh entries instead of reusing
+            # winners measured under the old factorization
             return BasicParams.make(
-                kernel="serve_prefill", arch=cfg.name, batch=int(B),
-                plen=int(plen), backend=jax.default_backend(),
+                kernel="serve_prefill", arch=cfg.name, batch=batch_size,
+                backend=jax.default_backend(), **mesh_bp_entries(mesh),
             )
+
+        def traffic_class(params, batch) -> TrafficClass:
+            B, plen = batch["tokens"].shape
+            return TrafficClass.of("prefill", int(B), int(plen))
 
         spec = register_kernel(
             KernelSpec(
                 name=f"serve_prefill/{cfg.name}",
                 make_region=lambda bp: _region(
-                    "serve_prefill", [PerfParam("impl", ("jit",))], instantiate
+                    "serve_prefill", self._degree_space(), instantiate
                 ),
                 shape_class=shape_class,
                 tags=("runtime", "serve"),
+                traffic_class=traffic_class,
             ),
             replace=True,
         )
-        return AutotunedOp(spec, db=self.db, tune=False, warm=False, monitor=False)
+        return AutotunedOp(
+            spec, db=self.db, tune=self.inline_tune, warm=False, monitor=False
+        )
 
     def _make_decode_op(self) -> AutotunedOp:
-        cfg, decode = self.cfg, self._decode
+        cfg, decode, mesh = self.cfg, self._decode, self.mesh
 
         def instantiate(point):
-            return lambda params, batch, cache: decode(params, batch, cache)
+            d = int(point.get("degree", 1))
+            if d == 1:
+                return lambda params, batch, cache: decode(params, batch, cache)
+
+            def chunked(params, batch, cache):
+                outs = [
+                    decode(params, _batch_chunk(batch, i, d), _cache_chunk(cache, i, d))
+                    for i in range(d)
+                ]
+                logits = jnp.concatenate([o[0] for o in outs], axis=0)
+                return logits, _cache_concat([o[1] for o in outs])
+
+            return chunked
+
+        batch_size = self.batch_size  # see _make_prefill_op: degree validity
 
         def shape_class(params, batch, cache) -> BasicParams:
-            return BasicParams.make(
-                kernel="serve_decode", arch=cfg.name,
-                batch=int(batch["tokens"].shape[0]),
-                backend=jax.default_backend(),
+            return BasicParams.make(  # per-call mesh: see _make_prefill_op
+                kernel="serve_decode", arch=cfg.name, batch=batch_size,
+                backend=jax.default_backend(), **mesh_bp_entries(mesh),
+            )
+
+        def traffic_class(params, batch, cache) -> TrafficClass:
+            # decode classes bucket by context length (the KV len at decode
+            # start): chunking economics differ between short- and
+            # long-context decode, so they must not share a winner
+            return TrafficClass.of(
+                "decode",
+                int(batch["tokens"].shape[0]),
+                max(1, int(cache["len"])),
             )
 
         spec = register_kernel(
             KernelSpec(
                 name=f"serve_decode/{cfg.name}",
                 make_region=lambda bp: _region(
-                    "serve_decode", [PerfParam("impl", ("jit",))], instantiate
+                    "serve_decode", self._degree_space(), instantiate
                 ),
                 shape_class=shape_class,
                 tags=("runtime", "serve"),
+                traffic_class=traffic_class,
             ),
             replace=True,
         )
-        return AutotunedOp(spec, db=self.db, tune=False, warm=False, monitor=False)
+        return AutotunedOp(
+            spec, db=self.db, tune=self.inline_tune, warm=False, monitor=False
+        )
+
+    # -- tuning hand-off -------------------------------------------------------
+
+    def _resolve(self, op: AutotunedOp, *args: Any) -> OpState:
+        """State for this call's traffic class: background submit or inline."""
+        if self.background is not None:
+            state = self.background.submit(op, *args, on_complete=self._on_tuned)
+        else:
+            before = op.states() if self.inline_tune else None
+            state = op.resolve(*args)
+            # attribution decided synchronously (thread idents recycle): a
+            # state this very resolve just tuned was tuned on the serve path
+            if (before is not None and state.tuned
+                    and state.bp.fingerprint() not in before):
+                self._hot_tuned.add(state.bp.fingerprint())
+        if state.tuned or state.from_cache:  # winner already known (DB hit /
+            self._on_tuned(state)            # inline tune): mirror its degree
+        return state
+
+    def _on_tuned(self, state: OpState) -> None:
+        """Mirror the live selection's degree into the DegreeController so
+        the serve loop's region entries switch to it (and restore max on
+        exit).  Called when a winner lands (background or inline/DB) and
+        again after a RuntimeSelector demotion re-selects."""
+        deg = state.region.selected.get("degree")
+        if deg is not None and state.traffic is not None:
+            self.degree.set_tuned(state.traffic.label, int(deg))
+
+    @property
+    def hot_path_cost_evaluations(self) -> int:
+        """Tuning cost evaluations paid inside a :meth:`run` call.
+
+        The acceptance bar for background tuning: stays 0 — every evaluation
+        happens on the BackgroundTuner's worker thread.
+        """
+        total = 0
+        for op in (self.prefill_op, self.decode_op):
+            for st in op.states().values():
+                if st.bp.fingerprint() in self._hot_tuned:
+                    total += st.cost_evaluations
+        return total
+
+    @property
+    def traffic_classes_seen(self) -> List[str]:
+        labels = set()
+        for op in (self.prefill_op, self.decode_op):
+            for st in op.states().values():
+                if st.traffic is not None:
+                    labels.add(st.traffic.label)
+        return sorted(labels)
 
     # -- batching --------------------------------------------------------------
 
@@ -148,35 +337,70 @@ class Server:
             plen = max(len(r.prompt) for r in group)
             batch = self._batch_inputs(group, plen)
 
+            t_batch = time.perf_counter()
+            pstate = self._resolve(self.prefill_op, self.params, batch)
+            plabel = pstate.traffic.label if pstate.traffic else "prefill"
             t0 = time.perf_counter()
-            logits, cache = self.prefill_op(self.params, batch)
-            logits.block_until_ready()
-            self.stats.prefill_s += time.perf_counter() - t0
+            with self.degree.region(plabel):
+                # dispatch through the resolved region directly: re-resolving
+                # per call would recompute the BP fingerprint on the hot path
+                logits, cache = pstate.region(self.params, batch)
+                logits.block_until_ready()
+            prefill_elapsed = time.perf_counter() - t0
+            self.stats.prefill_s += prefill_elapsed
+            if pstate.selector is not None:
+                # run-time layer: one observation per region call, so a
+                # regressed winner demotes to the next-best precompiled one
+                if pstate.selector.observe(prefill_elapsed):
+                    self._on_tuned(pstate)  # keep the controller in sync
 
             n_steps = max(r.max_new_tokens for r in group)
             gen = [[] for _ in group]
             t0 = time.perf_counter()
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            for step in range(n_steps):
-                for gi in range(len(group)):
-                    gen[gi].append(int(next_tok[gi]))
-                dbatch: Dict[str, Any] = {"tokens": next_tok[:, None]}
+
+            def dbatch_for(tok) -> Dict[str, Any]:
+                d: Dict[str, Any] = {"tokens": tok[:, None]}
                 if self.cfg.family == "vlm":
                     p = cache["len"]
                     pos = jnp.broadcast_to(p, (len(group), 1)).astype(jnp.int32)
-                    dbatch["positions"] = jnp.broadcast_to(pos, (3, len(group), 1))
-                logits, cache = self.decode_op(self.params, dbatch, cache)
-                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    d["positions"] = jnp.broadcast_to(pos, (3, len(group), 1))
+                return d
+
+            dbatch = dbatch_for(next_tok)
+            dstate = self._resolve(self.decode_op, self.params, dbatch, cache)
+            dlabel = dstate.traffic.label if dstate.traffic else "decode"
+            step_times: List[float] = []
+            # one set/restore per group, not per token: the label (and the
+            # executed candidate) is fixed for the whole decode loop
+            with self.degree.region(dlabel):
+                for step in range(n_steps):
+                    for gi in range(len(group)):
+                        gen[gi].append(int(next_tok[gi]))
+                    ts = time.perf_counter()
+                    logits, cache = dstate.region(self.params, dbatch, cache)
+                    logits.block_until_ready()
+                    step_times.append(time.perf_counter() - ts)
+                    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    dbatch = dbatch_for(next_tok)
             jax.block_until_ready(next_tok)
             self.stats.decode_s += time.perf_counter() - t0
             self.stats.tokens_out += n_steps * len(group)
+            if dstate.selector is not None and step_times:
+                # the observation must be unit-compatible with the tuned
+                # per-call trial cost: median of the *bare* region-call times
+                # (the loop's per-token python overhead excluded), one DB
+                # observation per group, never per token
+                if dstate.selector.observe(float(np.median(step_times))):
+                    self._on_tuned(dstate)  # keep the controller in sync
+            self.stats.batch_latencies.append(time.perf_counter() - t_batch)
 
             for gi, r in enumerate(group[: len(requests[i : i + self.batch_size])]):
                 out[r.rid] = gen[gi][: r.max_new_tokens]
         return out
 
 
-def _region(name: str, params: list, instantiate):
+def _region(name: str, space: ParamSpace, instantiate):
     from repro.core import ATRegion
 
-    return ATRegion(name, ParamSpace(params), instantiate)
+    return ATRegion(name, space, instantiate)

@@ -17,7 +17,7 @@ Large-scale behaviours implemented here and exercised by tests:
   measures for ``omp_set_num_threads``.
 * **gradient accumulation degree** — the PP: the global batch is split into
   ``n_microbatches`` scanned chunks; more microbatches = less activation
-  memory, more sequential steps (the thread-grain trade, DESIGN.md §2).
+  memory, more sequential steps (the thread-grain trade, docs/design.md §2).
 """
 from __future__ import annotations
 

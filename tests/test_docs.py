@@ -1,0 +1,39 @@
+"""Documentation integrity: the cross-link suite required by ISSUE 2.
+
+The same checks run standalone in CI via scripts/check_doc_links.py; keeping
+them in the tier-1 suite means a PR cannot land a dangling ``design.md §N``
+reference (the bug this suite was added to fix) or a broken relative link.
+"""
+import os
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "scripts")
+sys.path.insert(0, SCRIPTS)
+
+import check_doc_links  # noqa: E402
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/design.md", "docs/registry.md", "docs/serving.md"):
+        assert (check_doc_links.ROOT / rel).exists(), f"missing {rel}"
+
+
+def test_markdown_links_resolve():
+    assert check_doc_links.check_markdown_links() == []
+
+
+def test_design_section_references_resolve():
+    """Every `design.md §N` citation in docs/ and src/ names a real section."""
+    assert check_doc_links.check_design_section_refs() == []
+
+
+def test_no_dangling_designmd_references():
+    """The seed's dangling bare `DESIGN.md` references are gone for good."""
+    offenders = []
+    src = check_doc_links.ROOT / "src"
+    for path in src.rglob("*.py"):
+        if "DESIGN.md" in path.read_text():
+            offenders.append(str(path))
+    assert offenders == []

@@ -1,0 +1,379 @@
+"""Traffic-class serving autotuner tests (ISSUE 2 acceptance).
+
+Covers: traffic-class bucketing, the traffic dimension in the TuningDB key,
+background-tuner hand-off (safe default -> tuned hot swap, off the calling
+thread), DB merge of concurrently tuned classes, chunked-degree semantic
+equivalence, and the headline invariant — a Server with a BackgroundTuner
+performs **zero** tuning cost evaluations on the serve hot path, cold and
+after warmup.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    ATRegion,
+    AutotunedOp,
+    BasicParams,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    TrafficClass,
+    TuningDB,
+    bucket_pow2,
+)
+from repro.data import mixed_traffic_trace, synthetic_requests
+from repro.distributed.sharding import mesh_bp_entries, mesh_fingerprint
+from repro.models import init_params, param_specs
+from repro.runtime import BackgroundTuner, Server
+
+KEY = jax.random.PRNGKey(0)
+SMOKE = get_config("tinyllama-1.1b", smoke=True)
+
+
+def _traffic_spec(costs, calls, name="toy_traffic"):
+    """Toy spec whose default point (i=0) is deliberately not the argmin and
+    whose cost function records which thread evaluated it."""
+    space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            calls.append((point["i"], threading.get_ident()))
+            return float(costs[point["i"]])
+
+        return cost
+
+    return KernelSpec(
+        name,
+        make_region=lambda bp: ATRegion(name, space, lambda p: (lambda x: x * p["i"])),
+        shape_class=lambda x: BasicParams.make(kernel=name),
+        cost_factory=cost_factory,
+        traffic_class=lambda x: TrafficClass.of(
+            "prefill", int(x.shape[0]), int(x.shape[1])
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Traffic-class bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_pow2_rounds_up():
+    assert [bucket_pow2(n) for n in (1, 2, 3, 5, 8, 9, 100)] == [
+        1, 2, 4, 8, 8, 16, 128,
+    ]
+    with pytest.raises(ValueError):
+        bucket_pow2(0)
+
+
+def test_traffic_class_bucketing_and_label():
+    tc = TrafficClass.of("prefill", 3, 100)
+    assert (tc.batch_bucket, tc.seq_bucket) == (4, 128)
+    assert tc.label == "prefill/b4/s128"
+    # same bucket -> same class; over the boundary -> a new class
+    assert TrafficClass.of("prefill", 4, 65) == tc
+    assert TrafficClass.of("prefill", 4, 129) != tc
+    assert TrafficClass.of("decode", 4, 100) != tc
+    with pytest.raises(ValueError):
+        TrafficClass.of("train", 1, 1)
+    assert TrafficClass.from_bp_entries(tc.bp_entries()) == tc
+
+
+def test_traffic_class_is_a_db_dimension():
+    """Calls in the same bucket share one tuning entry; crossing a bucket
+    boundary tunes a fresh class — traffic is part of the BP fingerprint."""
+    calls = []
+    op = AutotunedOp(_traffic_spec([3.0, 1.0], calls), db=TuningDB())
+    op(jnp.ones((2, 100)))
+    assert len(calls) == 2
+    op(jnp.ones((2, 80)))  # same b2/s128 bucket: no re-tune
+    assert len(calls) == 2
+    op(jnp.ones((2, 200)))  # s256 bucket: its own search
+    assert len(calls) == 4
+    states = list(op.states().values())
+    assert sorted(s.traffic.label for s in states) == [
+        "prefill/b2/s128", "prefill/b2/s256",
+    ]
+    assert len(op.db.traffic_classes()) == 2
+    assert len(op.db.entries_matching(phase="prefill")) == 2
+    assert op.db.entries_matching(phase="decode") == {}
+
+
+# ---------------------------------------------------------------------------
+# Background tuner: default -> tuned hand-off, off the calling thread
+# ---------------------------------------------------------------------------
+
+
+def test_background_handoff_default_then_hot_swap():
+    calls = []
+    op = AutotunedOp(_traffic_spec([3.0, 1.0, 2.0], calls), db=TuningDB(), tune=False)
+    x = jnp.ones((2, 16))
+    with BackgroundTuner() as tuner:
+        state = tuner.submit(op, x)
+        # submit never evaluates on the caller: the safe default is live
+        assert state.region.selected == {"i": 0}
+        assert not state.tuned and not state.from_cache
+        assert tuner.drain(timeout=60)
+        assert state.region.selected == {"i": 1}  # the hot swap
+        assert state.tuned
+        # every evaluation ran on the worker thread, none on ours
+        assert len(calls) == 3
+        assert all(t != threading.get_ident() for _, t in calls)
+        assert state.tune_thread != threading.get_ident()
+        # top-k warmed off-path: demotion switching stays free
+        assert state.warmed >= 1 and state.region.is_compiled(state.region.selected)
+        assert tuner.tuned_labels == ["prefill/b2/s16"]
+        assert tuner.background_evaluations == 3
+        assert tuner.errors == []
+
+
+def test_background_submit_dedupes_inflight_classes():
+    calls, started = [], threading.Event()
+    release = threading.Event()
+
+    space = ParamSpace([PerfParam("i", (0, 1))])
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            started.set()
+            release.wait(30)  # hold the worker so resubmits race the tune
+            calls.append(point["i"])
+            return float(point["i"] + 1)
+
+        return cost
+
+    spec = KernelSpec(
+        "dedupe",
+        make_region=lambda bp: ATRegion(
+            "dedupe", space, lambda p: (lambda x: x)
+        ),
+        shape_class=lambda x: BasicParams.make(kernel="dedupe"),
+        cost_factory=cost_factory,
+        traffic_class=lambda x: TrafficClass.of("prefill", 1, int(x.shape[1])),
+    )
+    op = AutotunedOp(spec, db=TuningDB(), tune=False)
+    x = jnp.ones((1, 8))
+    with BackgroundTuner() as tuner:
+        s1 = tuner.submit(op, x)
+        assert started.wait(30)
+        s2 = tuner.submit(op, x)  # same class while tuning: not re-queued
+        assert s1 is s2 and tuner.pending == 1
+        release.set()
+        assert tuner.drain(timeout=60)
+        assert len(tuner.completed) == 1
+
+
+def test_background_failed_class_is_not_retried():
+    """A class whose search raises keeps serving the safe default and is
+    never re-enqueued (no silent background retry storm); the failure stays
+    visible in errors/failed_labels."""
+    calls = []
+    space = ParamSpace([PerfParam("i", (0, 1))])
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            calls.append(point["i"])
+            raise RuntimeError("boom")
+
+        return cost
+
+    spec = KernelSpec(
+        "failing",
+        make_region=lambda bp: ATRegion("failing", space, lambda p: (lambda x: x)),
+        shape_class=lambda x: BasicParams.make(kernel="failing"),
+        cost_factory=cost_factory,
+        traffic_class=lambda x: TrafficClass.of("prefill", 1, int(x.shape[1])),
+    )
+    op = AutotunedOp(spec, db=TuningDB(), tune=False)
+    x = jnp.ones((1, 8))
+    with BackgroundTuner() as tuner:
+        tuner.submit(op, x)
+        assert tuner.drain(timeout=30)
+        assert tuner.failed_labels == ["prefill/b1/s8"]
+        n_calls = len(calls)
+        state = tuner.submit(op, x)  # resubmission of a failed class: no-op
+        assert tuner.drain(timeout=30)
+        assert len(calls) == n_calls and len(tuner.errors) == 1
+        assert state.region.selected == {"i": 0}  # still the safe default
+
+
+def test_db_merge_of_concurrently_tuned_classes():
+    """Two processes tune disjoint traffic classes into separate DBs; merge
+    unions them and both winners stay final (zero re-tune on either side)."""
+    calls_a, calls_b = [], []
+    db_a, db_b = TuningDB(), TuningDB()
+    AutotunedOp(_traffic_spec([3.0, 1.0], calls_a), db=db_a)(jnp.ones((2, 16)))
+    AutotunedOp(_traffic_spec([2.0, 4.0], calls_b), db=db_b)(jnp.ones((4, 64)))
+
+    db_a.merge(db_b)
+    labels = [tc.label for tc in db_a.traffic_classes()]
+    assert labels == ["prefill/b2/s16", "prefill/b4/s64"]
+
+    # a fresh op over the merged DB serves both classes with zero evaluations
+    calls = []
+    op = AutotunedOp(_traffic_spec([0.0, 0.0], calls), db=db_a)
+    assert op.resolve(jnp.ones((2, 16))).from_cache
+    assert op.resolve(jnp.ones((4, 64))).from_cache
+    assert calls == []
+    assert op.resolve(jnp.ones((2, 16))).region.selected == {"i": 1}
+    assert op.resolve(jnp.ones((4, 64))).region.selected == {"i": 0}
+
+
+# ---------------------------------------------------------------------------
+# Mesh-shape DB keys
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_fingerprint_keys_bp():
+    assert mesh_fingerprint(None) == "host"
+    assert mesh_bp_entries() == {"mesh": "host"}
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    assert mesh_fingerprint(mesh) == "data1xmodel1"
+    a = BasicParams.make(kernel="k", **mesh_bp_entries(mesh))
+    b = BasicParams.make(kernel="k", **mesh_bp_entries(None))
+    assert a.fingerprint() != b.fingerprint()  # resharding -> fresh entries
+
+
+# ---------------------------------------------------------------------------
+# Serving: chunked-degree equivalence + the zero-hot-path-evals invariant
+# ---------------------------------------------------------------------------
+
+
+def _smoke_server(**kw):
+    params = init_params(KEY, param_specs(SMOKE))
+    return Server(SMOKE, params, batch_size=2, max_len=64, **kw), params
+
+
+def test_exact_batch_size_keys_serve_entries():
+    """Two servers whose batch sizes share a pow2 traffic bucket must not
+    share tuned winners: the degree domain is 'divisors of batch_size', so a
+    degree tuned at batch 4 is invalid (or row-dropping) at batch 3."""
+    params = init_params(KEY, param_specs(SMOKE))
+    db = TuningDB()
+
+    def prefill_state(server, plen=8):
+        reqs = synthetic_requests(SMOKE, server.batch_size, plen, 1)
+        batch = server._batch_inputs(reqs, plen)
+        return server.prefill_op.resolve_deferred(server.params, batch)
+
+    s3 = Server(SMOKE, params, batch_size=3, max_len=64, tuning_db=db)
+    st3 = prefill_state(s3)
+    s4 = Server(SMOKE, params, batch_size=4, max_len=64, tuning_db=db)
+    st4 = prefill_state(s4)
+    assert st3.traffic == st4.traffic  # same prefill/b4 bucket...
+    assert st3.bp.fingerprint() != st4.bp.fingerprint()  # ...distinct entries
+    assert st3.region.space.size() == 1  # batch 3: only degree 1 is valid
+    assert st4.region.space.size() == 3  # batch 4: degrees (1, 2, 4)
+
+
+def test_chunked_degree_candidates_are_semantically_identical():
+    """degree=2 (batch chunked) must reproduce degree=1 exactly — switching
+    candidates mid-serve cannot change greedy outputs."""
+    server, _ = _smoke_server()
+    trace = mixed_traffic_trace(SMOKE, 2, seed=3, scale=0.25)
+    plen = max(len(r.prompt) for r in trace)
+    batch = server._batch_inputs(trace, plen)
+
+    state = server.prefill_op.resolve(server.params, batch)
+    f1 = state.region.candidate({"degree": 1})
+    f2 = state.region.candidate({"degree": 2})
+    logits1, cache1 = f1(server.params, batch)
+    logits2, cache2 = f2(server.params, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits1, np.float32), np.asarray(logits2, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.argmax(logits1, axis=-1), np.argmax(logits2, axis=-1)
+    )
+
+    dbatch = {"tokens": jnp.argmax(logits1, axis=-1).astype(jnp.int32)[:, None]}
+    dstate = server.decode_op.resolve(server.params, dbatch, cache1)
+    d1, _ = dstate.region.candidate({"degree": 1})(server.params, dbatch, cache1)
+    d2, _ = dstate.region.candidate({"degree": 2})(server.params, dbatch, cache2)
+    np.testing.assert_allclose(
+        np.asarray(d1, np.float32), np.asarray(d2, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_chunked_degree_handles_hybrid_cache_layout():
+    """Hybrid-family caches mix (layers, B, ...) and tail (B, ...) leaves;
+    chunked candidates must split/concat the right axis per leaf."""
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    params = init_params(KEY, param_specs(cfg))
+    server = Server(cfg, params, batch_size=2, max_len=64)
+    reqs = synthetic_requests(cfg, 2, 8, 1)
+    batch = server._batch_inputs(reqs, 8)
+
+    state = server.prefill_op.resolve_deferred(server.params, batch)
+    l1, c1 = state.region.candidate({"degree": 1})(server.params, batch)
+    l2, c2 = state.region.candidate({"degree": 2})(server.params, batch)
+    np.testing.assert_allclose(
+        np.asarray(l1, np.float32), np.asarray(l2, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+    dbatch = {"tokens": jnp.argmax(l1, axis=-1).astype(jnp.int32)[:, None]}
+    dstate = server.decode_op.resolve_deferred(server.params, dbatch, c1)
+    d1, _ = dstate.region.candidate({"degree": 1})(server.params, dbatch, c1)
+    d2, _ = dstate.region.candidate({"degree": 2})(server.params, dbatch, c2)
+    np.testing.assert_allclose(
+        np.asarray(d1, np.float32), np.asarray(d2, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_server_background_tuning_zero_hot_path_evaluations():
+    """ISSUE 2 acceptance: on a mixed prefill/decode trace the serve hot path
+    performs zero tuning cost evaluations, cold AND after warmup — every
+    evaluation happens on the background worker."""
+    trace = mixed_traffic_trace(SMOKE, 4, seed=11, scale=0.25)
+    with BackgroundTuner() as tuner:
+        server, params = _smoke_server(background_tuner=tuner)
+        out = server.run(trace)  # cold: unseen classes queue, defaults serve
+        assert len(out) == len(trace)
+        assert server.hot_path_cost_evaluations == 0
+        assert len(server.traffic_classes_seen) >= 2  # mixed trace, >1 class
+
+        assert tuner.drain(timeout=300)
+        assert tuner.errors == []
+        assert tuner.background_evaluations > 0
+        # warm replay: tuned winners serve, still zero hot-path evaluations
+        server.run(trace)
+        assert server.hot_path_cost_evaluations == 0
+        serve_thread = threading.get_ident()
+        for op in (server.prefill_op, server.decode_op):
+            for st in op.states().values():
+                assert st.tuned
+                assert st.tune_thread != serve_thread
+        # degree protocol: tuned degrees mirrored, max restored on exit
+        for label, _ in tuner.completed:
+            assert server.degree.tuned(label) in server._degree_domain()
+        assert server.degree.current == server.degree.max_degree
+
+        # a second server over the same DB is warm from the first request on
+        server2, _ = _smoke_server(background_tuner=tuner, tuning_db=server.db)
+        server2.run(trace)
+        assert server2.hot_path_cost_evaluations == 0
+        assert all(
+            st.from_cache
+            for op in (server2.prefill_op, server2.decode_op)
+            for st in op.states().values()
+        )
+
+
+def test_server_inline_tuning_pays_on_the_hot_path():
+    """Accounting sanity: without the background tuner, inline tuning is
+    correctly attributed to the serving thread (the bench baseline)."""
+    trace = mixed_traffic_trace(SMOKE, 2, seed=5, scale=0.25)
+    server, _ = _smoke_server(inline_tune=True)
+    server.run(trace)
+    assert server.hot_path_cost_evaluations > 0
+    assert server.stats.batch_latencies  # p50/p99 source is populated
+    assert server.stats.latency_percentile(99) >= server.stats.latency_percentile(50)
