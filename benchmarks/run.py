@@ -25,6 +25,7 @@ def main() -> None:
         bench_fig13_14_combined,
         bench_roofline,
         bench_serve_traffic,
+        bench_tune_throughput,
         common,
     )
 
@@ -35,6 +36,7 @@ def main() -> None:
         bench_fig13_14_combined,
         bench_roofline,
         bench_serve_traffic,
+        bench_tune_throughput,
     ):
         try:
             mod.run()

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Gate the tuning-throughput perf trajectory against its committed baseline.
+
+Reads the machine-readable bench record (``BENCH_results.json``, written by
+``python -m benchmarks.run``; override with ``BENCH_JSON`` or argv[1]) and
+compares the staged pipeline's measured-evaluation counts from the
+``tune_throughput/<kernel>/staged`` rows against
+``benchmarks/baselines/tune_throughput.json``.
+
+Fails (exit 1) when any kernel's measured-evaluation count — or the total —
+regresses more than ``max_regression`` (default 1.2, i.e. >20%) over the
+committed baseline, or when a baselined kernel is missing from the record.
+Counts are deterministic (prescreen-k per kernel), so this never flakes on
+machine noise; improvements print a reminder to re-commit the baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "benchmarks" / "baselines" / "tune_throughput.json"
+
+ROW_RE = re.compile(r"^tune_throughput/(?P<kernel>[\w.\-]+)/staged$")
+EVALS_RE = re.compile(r"(?:^|;)evals=(\d+)")
+
+
+def staged_evals(record: dict) -> dict:
+    out = {}
+    for row in record.get("rows", []):
+        m = ROW_RE.match(row.get("name", ""))
+        if not m:
+            continue
+        ev = EVALS_RE.search(row.get("derived", ""))
+        if ev:
+            out[m.group("kernel")] = int(ev.group(1))
+    return out
+
+
+def main() -> int:
+    bench_path = Path(
+        sys.argv[1] if len(sys.argv) > 1
+        else os.environ.get("BENCH_JSON", "BENCH_results.json")
+    )
+    if not bench_path.exists():
+        print(f"check_bench_regression: {bench_path} not found "
+              "(run `python -m benchmarks.run` first)", file=sys.stderr)
+        return 1
+    with open(bench_path) as f:
+        record = json.load(f)
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+
+    limit = float(baseline.get("max_regression", 1.2))
+    expected = baseline["staged_evals"]
+    actual = staged_evals(record)
+
+    problems = []
+    improved = []
+    for kernel, base in expected.items():
+        got = actual.get(kernel)
+        if got is None:
+            problems.append(f"{kernel}: no tune_throughput staged row in record")
+        elif got > base * limit:
+            problems.append(
+                f"{kernel}: measured evaluations regressed {base} -> {got} "
+                f"(>{limit:.0%} of baseline)"
+            )
+        elif got < base:
+            improved.append(f"{kernel}: {base} -> {got}")
+
+    total = sum(actual.get(k, 0) for k in expected)
+    base_total = int(baseline["total_staged_evals"])
+    if total > base_total * limit:
+        problems.append(
+            f"total measured evaluations regressed {base_total} -> {total}"
+        )
+
+    for p in problems:
+        print(f"REGRESSION: {p}", file=sys.stderr)
+    if improved and not problems:
+        print("improvement — consider re-committing the baseline: "
+              + ", ".join(improved))
+    if not problems:
+        print(f"bench regression check OK: {total} measured evaluations "
+              f"(baseline {base_total}, limit {limit:.0%})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

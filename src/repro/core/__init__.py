@@ -22,6 +22,7 @@ Public API:
 from .cost import (
     FX100,
     TPU_V5E,
+    AdaptiveWallClockCost,
     CompiledRooflineCost,
     CostFunction,
     HardwareSpec,
@@ -30,6 +31,7 @@ from .cost import (
     WallClockCost,
     collective_bytes_from_hlo,
     roofline_from_compiled,
+    roofline_prescreen,
 )
 from .db import TuningDB
 from .degree import DegreeController
@@ -40,7 +42,7 @@ from .exchange import (
     enumerate_exchange_variants,
 )
 from .autotuned import AutotunedOp, OpState
-from .params import BasicParams, ParamSpace, PerfParam, pp_key
+from .params import BasicParams, ParamSpace, PerfParam, pp_key, project_point
 from .region import ATRegion
 from .registry import (
     REGISTRY,
@@ -55,8 +57,10 @@ from .search import (
     CoordinateDescent,
     ExhaustiveSearch,
     SearchResult,
+    StagedSearch,
     SuccessiveHalving,
     Trial,
+    default_prescreen_k,
 )
 from .traffic import PHASES, TrafficClass, bucket_pow2
 from .tuner import Tuner, RuntimeSelector
@@ -75,6 +79,7 @@ __all__ = [
     "ParamSpace",
     "PerfParam",
     "pp_key",
+    "project_point",
     "ATRegion",
     "LoopNest",
     "ExchangeVariant",
@@ -89,8 +94,10 @@ __all__ = [
     "TuningDB",
     "CostFunction",
     "WallClockCost",
+    "AdaptiveWallClockCost",
     "CompiledRooflineCost",
     "MemoryCost",
+    "roofline_prescreen",
     "RooflineTerms",
     "HardwareSpec",
     "TPU_V5E",
@@ -100,6 +107,8 @@ __all__ = [
     "ExhaustiveSearch",
     "CoordinateDescent",
     "SuccessiveHalving",
+    "StagedSearch",
+    "default_prescreen_k",
     "SearchResult",
     "Trial",
 ]

@@ -10,7 +10,13 @@ The life of a call ``autotuned("flash_attention")(q, k, v)``:
    the same DB file).
 3. **tune on miss** — the configured :class:`~repro.core.search.Search`
    under ``trial_budget`` evaluations; every trial lands in the DB, so an
-   interrupted sweep resumes where it stopped.
+   interrupted sweep resumes where it stopped.  With no pinned search the
+   op builds a per-shape-class staged pipeline (docs/tuning.md): a
+   **cross-shape-class warm start** (the nearest already-tuned sibling
+   class seeds the search) when the DB has one, a **roofline prescreen →
+   measured finals** :class:`~repro.core.search.StagedSearch` when the spec
+   provides a ``prescreen_factory`` (or ``staged=True`` forces the generic
+   compile-only prescreen), and plain exhaustive measured search otherwise.
 4. **top-k AOT warm** — the k best candidates are materialized through
    ``region.candidate`` (compiling them for this shape class), so run-time
    switching is a dict lookup — ppOpen-AT's free ``omp_set_num_threads``
@@ -29,11 +35,12 @@ from typing import Any, Callable, Dict, List, Mapping, Optional
 
 import jax
 
+from .cost import AdaptiveWallClockCost, roofline_prescreen
 from .db import TuningDB
-from .params import BasicParams
+from .params import BasicParams, project_point
 from .region import ATRegion
 from .registry import KernelSpec
-from .search import Search
+from .search import CoordinateDescent, Search, StagedSearch, default_prescreen_k
 from .traffic import TrafficClass
 from .tuner import RuntimeSelector, Tuner
 
@@ -51,7 +58,9 @@ class OpState:
     selector: Optional[RuntimeSelector] = None
     tuned: bool = False           # did *this process* run cost evaluations?
     from_cache: bool = False      # selection came from the DB, zero evals
-    cost_evaluations: int = 0
+    cost_evaluations: int = 0     # measured (stage-2) evaluations only
+    prescreen_evaluations: int = 0  # cheap stage-1 scores (never measured)
+    warm_seed: Optional[Dict[str, Any]] = None  # cross-class warm-start seed
     warmed: int = 0
     traffic: Optional[TrafficClass] = None  # set when the spec buckets traffic
     tune_thread: Optional[int] = None       # ident of the thread that tuned
@@ -80,6 +89,9 @@ class AutotunedOp:
         tolerance: float = 1.5,
         window: int = 8,
         cost_factory: Optional[Callable[..., Callable[[Mapping[str, Any]], float]]] = None,
+        staged: Optional[bool] = None,
+        prescreen_k: Optional[int] = None,
+        warm_start: bool = True,
     ) -> None:
         self.spec = spec
         self._registry = registry
@@ -93,6 +105,12 @@ class AutotunedOp:
         self.tolerance = tolerance
         self.window = window
         self.cost_factory = cost_factory or spec.cost_factory
+        # staged-pipeline policy (only consulted when no ``search`` is
+        # pinned): None = staged iff the spec has a prescreen_factory,
+        # True = force the generic roofline prescreen, False = never stage.
+        self.staged = staged
+        self.prescreen_k = prescreen_k
+        self.warm_start = warm_start
         self._states: Dict[str, OpState] = {}
         self._state_lock = threading.Lock()  # guards the two dicts below
         self._build_locks: Dict[str, threading.Lock] = {}
@@ -230,23 +248,40 @@ class AutotunedOp:
         background path swaps only after warming the winner).
         """
         region, bp = state.region, state.bp
+        search = self.search or self._default_search(state, args, kwargs)
         if self.cost_factory is not None:
             cost = self.cost_factory(region, bp, args, kwargs)
         else:
-            cost = _wallclock_cost(region, args, kwargs)
+            # a staged search's prescreen keeps its compiled executables;
+            # the measured stage runs on the same example args, so survivors
+            # execute those artifacts instead of compiling a second time
+            precompiled = getattr(
+                getattr(search, "prescreen", None), "compiled_by_point", None
+            )
+            cost = _wallclock_cost(region, args, kwargs, precompiled)
 
-        def budgeted(point: Mapping[str, Any]) -> float:
+        def budgeted(
+            point: Mapping[str, Any], budget: Optional[int] = None
+        ) -> float:
             if (
                 self.trial_budget is not None
                 and state.cost_evaluations >= self.trial_budget
             ):
                 raise TrialBudgetExhausted(self.spec.name)
             state.cost_evaluations += 1
+            if budget is not None and budgeted.supports_budget:
+                return cost(point, budget)
             return cost(point)
 
-        tuner = Tuner(self.db, self.search) if self.search else Tuner(self.db)
+        # let budget-aware searches (SuccessiveHalving rungs) pass their
+        # repeat budget through to an AdaptiveWallClockCost-style cost
+        budgeted.supports_budget = bool(getattr(cost, "supports_budget", False))
+
+        tuner = Tuner(self.db)
         try:
-            winner = dict(tuner.tune(region, bp, budgeted, select=select).best.point)
+            result = tuner.tune(region, bp, budgeted, select=select, search=search)
+            state.prescreen_evaluations += result.prescreen_evaluations
+            winner = dict(result.best.point)
         except TrialBudgetExhausted:
             # Budget hit mid-search: select the argmin over what we measured,
             # but do NOT record a DB best — only a completed search is final,
@@ -266,6 +301,44 @@ class AutotunedOp:
         state.tune_thread = threading.get_ident()
         return winner
 
+    def _default_search(
+        self, state: OpState, args: tuple, kwargs: dict
+    ) -> Optional[Search]:
+        """The per-shape-class strategy when no search was pinned.
+
+        Priority (docs/tuning.md): a staged prescreen → measured-finals
+        pipeline when the op has a prescreen and the space is big enough to
+        prune; a warm-started refinement when a sibling shape class is
+        already tuned (seeding either the staged ranking or a
+        CoordinateDescent hillclimb); ``None`` otherwise — the Tuner's
+        exhaustive default, the paper's faithful strategy.
+        """
+        space = state.region.space
+        seed = None
+        if self.warm_start:
+            near = self.db.nearest_tuned(state.bp)
+            if near is not None:
+                seed = project_point(space, near["point"])
+        prescreen = None
+        if self.staged is not False:
+            if self.spec.prescreen_factory is not None:
+                prescreen = self.spec.prescreen_factory(
+                    state.region, state.bp, args, kwargs
+                )
+            elif self.staged:
+                prescreen = roofline_prescreen(state.region, state.bp, args, kwargs)
+        if prescreen is not None:
+            n = sum(1 for _ in space.points())
+            k = self.prescreen_k or default_prescreen_k(n)
+            if n > k:  # otherwise nothing would be pruned: prescreen is waste
+                if seed is not None:
+                    state.warm_seed = dict(seed)
+                return StagedSearch(prescreen, k=k, warm_start=seed)
+        if seed is not None:
+            state.warm_seed = dict(seed)
+            return CoordinateDescent(start=seed)
+        return None
+
     def _warm_topk(self, state: OpState, args: tuple, kwargs: dict) -> int:
         """Materialize the k best candidates so switching never compiles."""
         ranked = sorted(self.db.trials(state.bp).items(), key=lambda kv: kv[1])
@@ -284,16 +357,34 @@ class AutotunedOp:
 
 
 def _wallclock_cost(
-    region: ATRegion, args: tuple, kwargs: dict
+    region: ATRegion,
+    args: tuple,
+    kwargs: dict,
+    precompiled: Optional[Mapping[str, Any]] = None,
 ) -> Callable[[Mapping[str, Any]], float]:
-    """Default cost: compile (untimed), then time one steady-state call."""
+    """Default measured cost: compile (untimed), then adaptive timed runs.
 
-    def cost(point: Mapping[str, Any]) -> float:
+    Variance-aware repeats (docs/tuning.md): the first steady-state run is
+    free to end the point's measurement if it is already clearly off the
+    incumbent; candidates within noise of the lead earn up to two more runs
+    until the confidence interval separates.
+
+    ``precompiled`` maps pp_keys to argument-specialized executables the
+    staged prescreen already built for these exact example args — reusing
+    them here skips the survivors' second compilation.  They are measurement
+    artifacts only and never enter ``region._compiled`` (dispatch stays on
+    shape-polymorphic jitted candidates; "precompiled" for the selector
+    still means the top-k warm set).
+    """
+    from .params import pp_key
+
+    def build(point: Mapping[str, Any]) -> Callable[[], Any]:
+        if precompiled:
+            compiled = precompiled.get(pp_key(point))
+            if compiled is not None:
+                return lambda: compiled(*args, **kwargs)
         fn = region.instantiate(point)  # NOT region.candidate: only the
         # top-k winners should count as "precompiled" for the selector
-        jax.block_until_ready(fn(*args, **kwargs))
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kwargs))
-        return time.perf_counter() - t0
+        return lambda: fn(*args, **kwargs)
 
-    return cost
+    return AdaptiveWallClockCost(build, warmup=1, min_repeats=1, max_repeats=3)

@@ -18,10 +18,12 @@ fixed.  The paper uses measured execution time on the FX100.  We provide:
 from __future__ import annotations
 
 import math
+import os
 import re
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Mapping, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import jax
 
@@ -108,7 +110,6 @@ def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
     only counting lines that declare a result type).
     """
     out: Dict[str, int] = {}
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _COLLECTIVE_RE.search(line)
         if not m:
@@ -244,6 +245,32 @@ def roofline_from_compiled(
 # ---------------------------------------------------------------------------
 
 
+def score_points_concurrently(
+    score_one: Callable[[Mapping[str, Any]], float],
+    points: Sequence[Mapping[str, Any]],
+    max_workers: Optional[int] = None,
+) -> List[float]:
+    """Score candidates on a bounded thread pool; failures score ``inf``.
+
+    The single shared policy for prescreen fan-out (XLA lowering/compilation
+    release the GIL): `CompiledRooflineCost.score_many` and
+    `StagedSearch`'s generic prescreen both delegate here, so the worker
+    bound and the exclude-don't-fail error handling cannot diverge.
+    """
+    workers = max_workers or min(8, os.cpu_count() or 2)
+
+    def score(p: Mapping[str, Any]) -> float:
+        try:
+            return float(score_one(p))
+        except Exception:
+            return math.inf
+
+    if workers <= 1 or len(points) <= 1:
+        return [score(p) for p in points]
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        return list(pool.map(score, points))
+
+
 class CostFunction:
     """cost(PP point) -> float seconds (lower is better)."""
 
@@ -287,6 +314,83 @@ class WallClockCost(CostFunction):
         return best
 
 
+class AdaptiveWallClockCost(CostFunction):
+    """Measured wall time with variance-aware adaptive repeats.
+
+    Fixed-repeat timing spends the same budget on a candidate that is 10×
+    off the incumbent as on one within noise of it.  This cost times each
+    point until its confidence interval separates from the best cost seen so
+    far (the *incumbent*), then stops:
+
+    * after ``min_repeats`` timed runs, a point whose best time is already
+      ``rel_margin`` above the incumbent is abandoned immediately;
+    * otherwise timing continues until ``best ± halfwidth`` (a
+      ``confidence``-sigma standard-error interval) no longer straddles the
+      incumbent, or ``max_repeats`` is reached.
+
+    ``supports_budget`` lets :class:`~repro.core.search.SuccessiveHalving`
+    pass its rung budget through: ``cost(point, budget)`` scales the repeat
+    cap.  ``timed_runs`` / ``measured_points`` expose the totals the
+    tuning-throughput benchmark reports.
+    """
+
+    supports_budget = True
+
+    def __init__(
+        self,
+        build: Callable[[Mapping[str, Any]], Callable[[], Any]],
+        warmup: int = 1,
+        min_repeats: int = 1,
+        max_repeats: int = 4,
+        rel_margin: float = 0.25,
+        confidence: float = 2.0,
+    ) -> None:
+        self.build = build
+        self.warmup = warmup
+        self.min_repeats = max(1, min_repeats)
+        self.max_repeats = max(self.min_repeats, max_repeats)
+        self.rel_margin = rel_margin
+        self.confidence = confidence
+        self.incumbent = math.inf
+        self.timed_runs = 0
+        self.measured_points = 0
+
+    def __call__(
+        self, point: Mapping[str, Any], budget: Optional[int] = None
+    ) -> float:
+        fn = self.build(point)
+        for _ in range(self.warmup):
+            _block(fn())
+        cap = self.max_repeats * max(1, int(budget or 1))
+        times: List[float] = []
+        while len(times) < cap:
+            t0 = time.perf_counter()
+            out = fn()
+            _block(out)
+            times.append(time.perf_counter() - t0)
+            self.timed_runs += 1
+            if len(times) < self.min_repeats:
+                continue
+            best = min(times)
+            if not math.isfinite(self.incumbent):
+                if len(times) >= self.min_repeats + 1:
+                    break  # first point: just establish the incumbent
+                continue
+            if best > self.incumbent * (1.0 + self.rel_margin):
+                break  # clearly worse: stop paying for precision
+            if len(times) >= 2:
+                mean = sum(times) / len(times)
+                var = sum((t - mean) ** 2 for t in times) / (len(times) - 1)
+                halfwidth = self.confidence * math.sqrt(var / len(times))
+                if (best + halfwidth < self.incumbent
+                        or best - halfwidth > self.incumbent):
+                    break  # CI separated from the incumbent either way
+        cost = min(times)
+        self.measured_points += 1
+        self.incumbent = min(self.incumbent, cost)
+        return cost
+
+
 class CompiledRooflineCost(CostFunction):
     """Lower+compile the candidate and score it with the roofline model.
 
@@ -301,12 +405,20 @@ class CompiledRooflineCost(CostFunction):
         lower: Callable[[Mapping[str, Any]], Any],
         n_chips: int,
         hw: HardwareSpec = TPU_V5E,
+        keep_compiled: bool = False,
     ) -> None:
         self.lower = lower
         self.n_chips = n_chips
         self.hw = hw
         self.last_terms: Optional[RooflineTerms] = None
         self.terms_by_point: Dict[str, RooflineTerms] = {}
+        # keep_compiled retains each candidate's compiled executable so a
+        # downstream measured stage can execute it instead of recompiling
+        # (the staged pipeline's prescreen already paid the compile cost).
+        # The executables are argument-shape-specialized, so they are valid
+        # only for the example arguments the prescreen lowered against.
+        self.keep_compiled = keep_compiled
+        self.compiled_by_point: Dict[str, Any] = {}
 
     def __call__(self, point: Mapping[str, Any]) -> float:
         from .params import pp_key
@@ -315,8 +427,25 @@ class CompiledRooflineCost(CostFunction):
         compiled = lowered.compile()
         terms = roofline_from_compiled(lowered, compiled, self.n_chips, self.hw)
         self.last_terms = terms
-        self.terms_by_point[pp_key(point)] = terms
+        key = pp_key(point)
+        self.terms_by_point[key] = terms
+        if self.keep_compiled:
+            self.compiled_by_point[key] = compiled
         return terms.total_s
+
+    def score_many(
+        self,
+        points: Sequence[Mapping[str, Any]],
+        max_workers: Optional[int] = None,
+    ) -> List[float]:
+        """Score candidates concurrently on a bounded thread pool.
+
+        Lowering and XLA compilation release the GIL, so independent
+        candidates compile in parallel — this is the staged pipeline's
+        prescreen fan-out (docs/tuning.md).  Per-point failures score
+        ``inf`` rather than aborting the batch.
+        """
+        return score_points_concurrently(self, points, max_workers)
 
 
 class MemoryCost(CostFunction):
@@ -333,6 +462,33 @@ class MemoryCost(CostFunction):
             + getattr(ma, "argument_size_in_bytes", 0)
             + getattr(ma, "output_size_in_bytes", 0)
         )
+
+
+def roofline_prescreen(
+    region: Any, bp: Any, args: tuple, kwargs: dict,
+) -> Optional[CompiledRooflineCost]:
+    """The generic staged-pipeline prescreen for any AT region.
+
+    Matches the ``KernelSpec.prescreen_factory`` signature: lowers + compiles
+    each candidate against the call's example arguments (no execution, no
+    allocation) and scores it with the roofline model — FIBER's
+    before-execution layer as stage 1 of the staged pipeline
+    (docs/tuning.md).  Returns ``None`` when there are no example arguments
+    to lower against (nothing to compile — the op falls back to single-stage
+    search).
+
+    The compiled executables are retained (``keep_compiled``): the measured
+    finals run on the same example arguments, so survivors execute the
+    prescreen's artifact instead of paying a second compilation — the eval
+    reduction becomes a wall-clock reduction too.
+    """
+    if not args and not kwargs:
+        return None
+
+    def lower(point: Mapping[str, Any]) -> Any:
+        return jax.jit(region.instantiate(point)).lower(*args, **kwargs)
+
+    return CompiledRooflineCost(lower, n_chips=1, keep_compiled=True)
 
 
 def _block(x: Any) -> Any:

@@ -32,6 +32,7 @@ install-layer sweeps over disjoint shape classes) union rather than clobber.
 from __future__ import annotations
 
 import json
+import math
 import os
 import tempfile
 import threading
@@ -196,6 +197,49 @@ class TuningDB:
                     out[fp] = json.loads(json.dumps(entry))
         return out
 
+    def nearest_tuned(
+        self,
+        bp: BasicParams,
+        match: Tuple[str, ...] = ("kernel",),
+    ) -> Optional[Dict[str, Any]]:
+        """The completed search nearest to ``bp`` among sibling shape classes.
+
+        The cross-shape-class warm start (docs/tuning.md): an untuned class
+        looks up the already-tuned entry with the same value for every
+        ``match`` key (same kernel by default) and the smallest BP-echo
+        distance — numeric dimensions compare on a log2 scale (bucket
+        distance: seq 256 is one bucket from 512, not 256 away), any other
+        mismatch costs 1.  Only *final* bests qualify (an interim winner
+        from a crashed sweep must not seed refinement), and the entry for
+        ``bp`` itself never matches.
+
+        Returns ``{"point", "cost", "bp", "distance"}`` or ``None``.
+        """
+        target = _json_roundtrip(bp.asdict())
+        if any(k not in target for k in match):
+            return None
+        own_fp = bp.fingerprint()
+        best: Optional[Dict[str, Any]] = None
+        with self._lock:
+            for fp, entry in self._data.items():
+                if fp == own_fp:
+                    continue
+                rec = entry.get("best")
+                if not rec or not rec.get("final"):
+                    continue
+                echo = _json_roundtrip(entry.get("bp", {}))
+                if any(echo.get(k) != target[k] for k in match):
+                    continue
+                d = _bp_distance(target, echo, skip=match)
+                if best is None or d < best["distance"]:
+                    best = {
+                        "point": dict(rec["point"]),
+                        "cost": float(rec["cost"]),
+                        "bp": echo,
+                        "distance": d,
+                    }
+        return best
+
     def traffic_classes(self) -> list:
         """Distinct serving traffic classes present in the DB, sorted by label.
 
@@ -276,6 +320,41 @@ class TuningDB:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+
+
+def _json_roundtrip(d: Mapping[str, Any]) -> Dict[str, Any]:
+    """Normalize a BP dict the way on-disk entries are stored (tuples become
+    lists, exotic scalars become strings) so live and loaded echoes compare."""
+    return json.loads(json.dumps(dict(d), default=str))
+
+
+def _is_number(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _bp_distance(
+    a: Mapping[str, Any], b: Mapping[str, Any], skip: Tuple[str, ...] = ()
+) -> float:
+    """Shape-class distance between two BP echoes.
+
+    Numeric dimensions are compared as ``|log2(a) - log2(b)|`` — one
+    power-of-two bucket apart costs 1 — everything else (missing keys,
+    non-numeric mismatches like dtype or phase) costs a flat 1 per key.
+    """
+    d = 0.0
+    for key in set(a) | set(b):
+        if key in skip:
+            continue
+        va, vb = a.get(key), b.get(key)
+        if va == vb:
+            continue
+        if _is_number(va) and _is_number(vb):
+            d += abs(
+                math.log2(max(abs(va), 1e-12)) - math.log2(max(abs(vb), 1e-12))
+            )
+        else:
+            d += 1.0
+    return d
 
 
 def _merge_entries(

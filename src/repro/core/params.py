@@ -126,6 +126,7 @@ class ParamSpace:
             raise ValueError(f"duplicate PerfParam names: {names}")
         self.params: Tuple[PerfParam, ...] = tuple(params)
         self.constraint = constraint
+        self._members: Any = None  # explicit enumeration (see subset())
 
     @property
     def names(self) -> Tuple[str, ...]:
@@ -141,7 +142,15 @@ class ParamSpace:
         return self.constraint is None or bool(self.constraint(dict(point)))
 
     def points(self) -> Iterator[Dict[str, Any]]:
-        """Every feasible PP assignment (exhaustive enumeration)."""
+        """Every feasible PP assignment (exhaustive enumeration).
+
+        A subset space enumerates its explicit member list instead,
+        preserving the order it was built with (prescreen rank order).
+        """
+        if self._members is not None:
+            for point in self._members:
+                yield dict(point)
+            return
         domains = [p.domain for p in self.params]
         for combo in itertools.product(*domains):
             point = dict(zip(self.names, combo))
@@ -153,6 +162,27 @@ class ParamSpace:
         for point in self.points():
             return point
         raise ValueError("ParamSpace has no feasible point")
+
+    def subset(self, points: Sequence[Mapping[str, Any]]) -> "ParamSpace":
+        """A space restricted to an explicit candidate list.
+
+        The staged pipeline's measured-finals stage runs a full
+        :class:`~repro.core.search.Search` over prescreen survivors only;
+        the subset keeps the parent's params (so ``validate`` still checks
+        domains) but enumeration and feasibility are membership in
+        ``points``.
+        """
+        members = [dict(p) for p in points]
+        if not members:
+            raise ValueError("ParamSpace.subset() needs at least one point")
+        keys = {pp_key(p) for p in members}
+        parent_feasible = self.feasible
+        sub = ParamSpace(
+            self.params,
+            constraint=lambda p: pp_key(p) in keys and parent_feasible(p),
+        )
+        sub._members = members  # ordered enumeration (prescreen rank order)
+        return sub
 
     def neighbours(self, point: Mapping[str, Any]) -> Iterator[Dict[str, Any]]:
         """Coordinate-move neighbourhood (for hillclimb search): all feasible
@@ -183,3 +213,41 @@ class ParamSpace:
 def pp_key(point: Mapping[str, Any]) -> str:
     """Canonical JSON key for one PP assignment (DB storage)."""
     return json.dumps({k: _freeze(v) for k, v in sorted(point.items())}, default=str)
+
+
+def project_point(
+    space: ParamSpace, point: Mapping[str, Any]
+) -> "Dict[str, Any] | None":
+    """Project a (possibly foreign-shape-class) PP point onto ``space``.
+
+    Cross-shape-class warm starts reuse a neighbouring class's winner, but
+    that class's domains can differ (block candidates divide *its* seq/width,
+    not ours).  Per parameter: keep an in-domain value, snap a numeric value
+    to the nearest numeric domain candidate, and fall back to the space
+    default's value for anything else (missing params, non-numeric
+    mismatches).  Returns ``None`` when the projected point is infeasible —
+    a seed must never smuggle an invalid candidate past the constraint.
+    """
+    try:
+        default = space.default()
+    except ValueError:
+        return None
+    projected: Dict[str, Any] = {}
+    for param in space.params:
+        v = point.get(param.name, default[param.name])
+        # compare frozen: a disk-loaded seed has JSON lists where the domain
+        # has tuples, and that must still count as an exact match
+        fv = _freeze(v)
+        match = next((d for d in param.domain if _freeze(d) == fv), None)
+        if match is not None:
+            projected[param.name] = match
+            continue
+        numeric = [
+            d for d in param.domain
+            if isinstance(d, (int, float)) and not isinstance(d, bool)
+        ]
+        if numeric and isinstance(v, (int, float)) and not isinstance(v, bool):
+            projected[param.name] = min(numeric, key=lambda d: abs(d - v))
+        else:
+            projected[param.name] = default[param.name]
+    return projected if space.feasible(projected) else None

@@ -55,6 +55,12 @@ class KernelSpec:
     :class:`~repro.core.traffic.TrafficClass`; its entries extend the shape
     class BP, so each traffic class tunes — and hot-swaps — independently
     (docs/serving.md).
+    ``prescreen_factory``, when given, opts the op into the staged search
+    pipeline (docs/tuning.md): it returns the *cheap* stage-1 cost (analytic
+    model or compile-only roofline — :func:`repro.core.cost.roofline_prescreen`
+    is the generic choice) that ranks the full candidate space so only the
+    top-k survivors pay a measured evaluation; returning ``None`` falls back
+    to single-stage search for that shape class.
     """
 
     name: str
@@ -65,6 +71,9 @@ class KernelSpec:
     ] = None
     tags: Tuple[str, ...] = ()
     traffic_class: Optional[Callable[..., "TrafficClass"]] = None
+    prescreen_factory: Optional[
+        Callable[[ATRegion, BasicParams, tuple, dict], Optional[Callable[[Mapping[str, Any]], float]]]
+    ] = None
 
 
 class Registry:

@@ -13,6 +13,11 @@ distributed PPs create:
 * :class:`SuccessiveHalving` — measure all points with a cheap/noisy budget,
   keep the best half, re-measure with doubled budget, repeat.  Useful when
   cost evaluation itself is expensive (wall-clock with many repeats).
+* :class:`StagedSearch` — the staged tuning pipeline (docs/tuning.md): a
+  cheap *prescreen* cost scores the full space (independent candidates
+  dispatched concurrently — XLA lowering/compilation releases the GIL), only
+  the top-k survivors reach the *measured finals* search, and an optional
+  warm-start seed from a neighbouring shape class is always kept alive.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
-from .params import ParamSpace, pp_key
+from .params import ParamSpace, pp_key, project_point
 
 
 @dataclass
@@ -34,6 +39,10 @@ class SearchResult:
     best: Trial
     trials: List[Trial] = field(default_factory=list)
     evaluations: int = 0
+    # staged pipeline bookkeeping: how many candidates the cheap prescreen
+    # scored (zero for single-stage strategies) and what it scored them at.
+    prescreen_evaluations: int = 0
+    prescreen_costs: Dict[str, float] = field(default_factory=dict)
 
     def costs_by_key(self) -> Dict[str, float]:
         return {pp_key(t.point): t.cost for t in self.trials}
@@ -125,11 +134,25 @@ class SuccessiveHalving(Search):
     ``cost`` must accept ``(point, budget)`` where budget is a positive int
     (e.g. number of timing repeats); wrap a plain cost with
     ``lambda p, b: cost(p)`` if budget-insensitive.
+
+    ``on_trial`` (if given) is called after each evaluation — the same
+    incremental-DB-write hook :class:`ExhaustiveSearch` and
+    :class:`CoordinateDescent` have, so an interrupted measured-finals run
+    resumes from its recorded trials instead of starting over
+    (fault-tolerance parity across strategies).
     """
 
-    def __init__(self, initial_budget: int = 1, eta: int = 2) -> None:
+    needs_budget = True  # run() calls cost(point, budget), not cost(point)
+
+    def __init__(
+        self,
+        initial_budget: int = 1,
+        eta: int = 2,
+        on_trial: Optional[Callable[[Trial], None]] = None,
+    ) -> None:
         self.initial_budget = initial_budget
         self.eta = eta
+        self.on_trial = on_trial
 
     def run(self, space: ParamSpace, cost) -> SearchResult:
         alive: List[Dict[str, Any]] = [dict(p) for p in space.points()]
@@ -146,9 +169,111 @@ class SuccessiveHalving(Search):
                 t = Trial(dict(p), c)
                 scored.append(t)
                 trials.append(t)
+                if self.on_trial:
+                    self.on_trial(t)
             scored.sort(key=lambda t: t.cost)
             if len(scored) == 1:
                 return SearchResult(best=scored[0], trials=trials, evaluations=evaluations)
             keep = max(1, len(scored) // self.eta)
             alive = [t.point for t in scored[:keep]]
             budget *= self.eta
+
+
+def default_prescreen_k(n_points: int) -> int:
+    """How many prescreen survivors reach the measured-finals stage.
+
+    ``ceil(sqrt(n))`` keeps the measured-evaluation count sublinear in the
+    space size while leaving enough slack for prescreen ranking error — see
+    docs/tuning.md for how to override it per op.
+    """
+    return max(2, math.isqrt(max(1, n_points - 1)) + 1)
+
+
+class StagedSearch(Search):
+    """Roofline prescreen → measured finals, with an optional warm-start seed.
+
+    Stage 1 scores *every* feasible point with ``prescreen`` — an analytic /
+    compile-only cost (e.g. :class:`~repro.core.cost.CompiledRooflineCost`)
+    that never executes a candidate.  Independent candidates are scored
+    concurrently on a bounded :class:`ThreadPoolExecutor`: XLA lowering and
+    compilation release the GIL, so prescreen wall time scales down with
+    cores.  A candidate whose prescreen raises is scored ``inf`` (it can
+    still be reached by raising ``k`` — it is excluded, not failed).
+
+    Stage 2 hands the ``k`` best-scoring survivors (plus ``warm_start``, if
+    given — the seed is never pruned) to the ``finals`` search, which runs
+    the *measured* ``cost`` the caller passed to :meth:`run`.  With
+    ``k >= |space|`` every point survives and the result is exactly the
+    exhaustive argmin of the measured cost.
+
+    ``finals`` defaults to :class:`ExhaustiveSearch` over the survivors; a
+    strategy with ``needs_budget`` (:class:`SuccessiveHalving`) gets the
+    plain measured cost bridged to its ``(point, budget)`` signature unless
+    the cost object itself advertises ``supports_budget``.
+    """
+
+    def __init__(
+        self,
+        prescreen: Callable[[Mapping[str, Any]], float],
+        k: Optional[int] = None,
+        finals: Optional[Search] = None,
+        warm_start: Optional[Mapping[str, Any]] = None,
+        max_workers: Optional[int] = None,
+        on_trial: Optional[Callable[[Trial], None]] = None,
+    ) -> None:
+        self.prescreen = prescreen
+        self.k = k
+        self.finals = finals
+        self.warm_start = dict(warm_start) if warm_start is not None else None
+        self.max_workers = max_workers
+        self.on_trial = on_trial
+
+    def _score_all(
+        self, points: List[Dict[str, Any]]
+    ) -> Dict[str, float]:
+        from .cost import score_points_concurrently
+
+        batch = getattr(self.prescreen, "score_many", None)
+        if batch is not None:  # e.g. CompiledRooflineCost: it owns the pool
+            scores = batch(points, max_workers=self.max_workers)
+        else:
+            scores = score_points_concurrently(
+                self.prescreen, points, self.max_workers
+            )
+        return {pp_key(p): s for p, s in zip(points, scores)}
+
+    def run(self, space: ParamSpace, cost) -> SearchResult:
+        points = [dict(p) for p in space.points()]
+        if not points:
+            raise ValueError("no feasible points to search")
+
+        scores = self._score_all(points)
+        k = self.k if self.k is not None else default_prescreen_k(len(points))
+        ranked = sorted(points, key=lambda p: scores[pp_key(p)])
+        survivors = ranked[: max(1, k)]
+
+        seed = None
+        if self.warm_start is not None:
+            seed = project_point(space, self.warm_start)
+        if seed is not None:
+            skey = pp_key(seed)
+            survivors = [p for p in survivors if pp_key(p) != skey]
+            # the seed leads: it becomes the measured incumbent adaptive
+            # costs prune against, so refinement runs stay short.  It
+            # extends the survivor list (k+1 finals) rather than evicting
+            # the k-th-ranked candidate — the seed is *additional* evidence,
+            # and displacing a prescreen pick would make a stale sibling
+            # winner able to shadow this class's own best candidate.
+            survivors.insert(0, seed)
+
+        finals = self.finals or ExhaustiveSearch(on_trial=self.on_trial)
+        if getattr(finals, "needs_budget", False) and not getattr(
+            cost, "supports_budget", False
+        ):
+            measured = lambda p, budget: cost(p)  # noqa: E731
+        else:
+            measured = cost
+        result = finals.run(space.subset(survivors), measured)
+        result.prescreen_evaluations = len(points)
+        result.prescreen_costs = scores
+        return result

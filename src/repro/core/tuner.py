@@ -40,12 +40,31 @@ class Tuner:
         cost: Callable[[Mapping[str, Any]], float],
         layer: str = "before_execution",
         select: bool = True,
+        search: Optional[Search] = None,
     ) -> SearchResult:
-        """AT = argmin_PP cost(PP | BP).  Records every trial in the DB."""
+        """AT = argmin_PP cost(PP | BP).  Records every trial in the DB.
+
+        ``search`` overrides the tuner's strategy for this one problem —
+        the staged pipeline builds a per-shape-class search (warm-start
+        seed, prescreen over this class's example args) that cannot be
+        pinned at construction time.
+        """
         if layer not in LAYERS:
             raise ValueError(f"unknown FIBER layer {layer!r}; expected one of {LAYERS}")
 
-        def caching_cost(point: Mapping[str, Any]) -> float:
+        supports_budget = bool(getattr(cost, "supports_budget", False))
+
+        def caching_cost(
+            point: Mapping[str, Any], budget: Optional[int] = None
+        ) -> float:
+            if budget is not None and supports_budget:
+                # budget-aware re-measurement (SuccessiveHalving rungs): a
+                # higher budget buys a *better* estimate, so the cached
+                # trial must not short-circuit it; the DB keeps the latest
+                # (highest-budget) estimate for resume.
+                c = float(cost(point, budget))
+                self.db.record_trial(bp, point, c, layer)
+                return c
             prior = self.db.trial_cost(bp, point)
             if prior is not None:
                 return prior  # resume support: interrupted AT re-uses trials
@@ -53,7 +72,10 @@ class Tuner:
             self.db.record_trial(bp, point, c, layer)
             return c
 
-        result = self.search.run(region.space, caching_cost)
+        # budgeted searches probe this to decide whether budgets pass through
+        caching_cost.supports_budget = supports_budget
+
+        result = (search or self.search).run(region.space, caching_cost)
         self.db.record_best(bp, result.best.point, result.best.cost, layer)
         if select:
             region.select(result.best.point)

@@ -90,16 +90,21 @@ def _bp_dims(bp: BasicParams):
     return (bp["iv"], bp["iz"], bp["mx"], bp["my"])
 
 
+def _analytic_factory(region, bp, args, kwargs):
+    return lambda point: analytic_cost(point, dims=_bp_dims(bp))
+
+
 register_kernel(
     KernelSpec(
         "exb",
         make_region=lambda bp: exb_region(dims=_bp_dims(bp)),
         shape_class=shape_class,
         # install-layer AT on a host without the target hardware: the
-        # memory-bound analytic model replaces wall-clock measurement
-        cost_factory=lambda region, bp, args, kwargs: (
-            lambda point: analytic_cost(point, dims=_bp_dims(bp))
-        ),
+        # memory-bound analytic model replaces wall-clock measurement, and
+        # doubles as the staged prescreen — stage 1 ranks exactly, so the
+        # measured-finals stage only confirms the top-k
+        cost_factory=_analytic_factory,
+        prescreen_factory=_analytic_factory,
         tags=("pallas",),
     ),
     replace=True,

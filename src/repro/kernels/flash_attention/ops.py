@@ -7,6 +7,7 @@ from typing import Any, Mapping
 import jax
 
 from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
+from repro.core.cost import roofline_prescreen
 
 from .flash_attention import flash_attention, vmem_bytes
 from .ref import attention_ref
@@ -59,6 +60,9 @@ register_kernel(
         "flash_attention",
         make_region=lambda bp: flash_region(bp["seq"], bp["hd"]),
         shape_class=shape_class,
+        # staged pipeline stage 1: compile-only roofline ranking of the
+        # block-shape space; only top-k survivors pay a measured run
+        prescreen_factory=roofline_prescreen,
         tags=("pallas",),
     ),
     replace=True,

@@ -7,6 +7,7 @@ from typing import Any, Mapping
 import jax
 
 from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
+from repro.core.cost import roofline_prescreen
 
 from .ref import rglru_scan_ref
 from .rglru_scan import rglru_scan, vmem_bytes
@@ -55,6 +56,7 @@ register_kernel(
         "rglru_scan",
         make_region=lambda bp: rglru_region(bp["width"], bp["seq"]),
         shape_class=shape_class,
+        prescreen_factory=roofline_prescreen,
         tags=("pallas",),
     ),
     replace=True,

@@ -7,6 +7,7 @@ from typing import Any, Mapping
 import jax
 
 from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
+from repro.core.cost import roofline_prescreen
 
 from .ref import ssm_scan_ref
 from .ssm_scan import ssm_scan, vmem_bytes
@@ -59,6 +60,7 @@ register_kernel(
         "ssm_scan",
         make_region=lambda bp: ssm_region(bp["d_inner"], bp["seq"], bp["n_state"]),
         shape_class=shape_class,
+        prescreen_factory=roofline_prescreen,
         tags=("pallas",),
     ),
     replace=True,

@@ -7,6 +7,7 @@ from typing import Any, Mapping
 import jax
 
 from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
+from repro.core.cost import roofline_prescreen
 
 from .ref import stress_ref
 from .stress import stress_pallas, vmem_bytes
@@ -50,6 +51,7 @@ register_kernel(
         "stress",
         make_region=lambda bp: stress_region(dims=(bp["nk"], bp["nj"], bp["ni"])),
         shape_class=shape_class,
+        prescreen_factory=roofline_prescreen,
         tags=("pallas",),
     ),
     replace=True,

@@ -17,6 +17,15 @@ moves that layer onto a worker thread:
    :class:`~repro.core.degree.DegreeController` use, so the hot swap is a
    dict-lookup away from the next request, with zero compilation.
 
+The worker's search is the op's default path — the staged tuning pipeline
+(docs/tuning.md): a traffic class whose kernel already has a tuned sibling
+class starts from that winner (a short refinement run instead of a full
+sweep), and specs with a prescreen rank the space with the cheap
+before-execution cost so only top-k survivors pay a measured evaluation.
+:attr:`background_evaluations` counts the measured stage only;
+:attr:`prescreen_evaluations` and :attr:`warm_started_labels` expose the
+pipeline's bookkeeping for the operator and the throughput benchmark.
+
 An optional ``on_complete`` callback lets the server mirror the tuned
 degree into its :class:`~repro.core.degree.DegreeController` (the
 ``omp_set_num_threads`` bookkeeping) the moment a winner lands.
@@ -144,8 +153,18 @@ class BackgroundTuner:
 
     @property
     def background_evaluations(self) -> int:
-        """Cost evaluations this tuner ran — all of them off the hot path."""
+        """Measured cost evaluations this tuner ran — all off the hot path."""
         return sum(state.cost_evaluations for _, state in self.completed)
+
+    @property
+    def prescreen_evaluations(self) -> int:
+        """Cheap stage-1 scores (analytic / compile-only, never executed)."""
+        return sum(state.prescreen_evaluations for _, state in self.completed)
+
+    @property
+    def warm_started_labels(self) -> List[str]:
+        """Classes tuned as warm-started refinements of a sibling's winner."""
+        return [label for label, st in self.completed if st.warm_seed is not None]
 
     # -- worker --------------------------------------------------------------
 

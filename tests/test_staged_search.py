@@ -1,0 +1,537 @@
+"""Staged tuning pipeline tests (ISSUE 3).
+
+Covers: StagedSearch invariants (prescreen-k = |space| == exhaustive argmin,
+survivor budget, warm-start seed survival), warm-started CoordinateDescent
+never regressing below its seed, SuccessiveHalving's on_trial/resume parity,
+adaptive wall-clock timing, the TuningDB nearest-shape-class query,
+PP-point projection, and the AutotunedOp/BackgroundTuner integration of the
+pipeline (staged tune on the worker, cross-class warm starts, eval
+accounting).
+"""
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property sections skip, unit tests still run
+    given = None
+
+from repro.core import (
+    ATRegion,
+    AdaptiveWallClockCost,
+    AutotunedOp,
+    BasicParams,
+    CoordinateDescent,
+    ExhaustiveSearch,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    StagedSearch,
+    SuccessiveHalving,
+    Trial,
+    TuningDB,
+    default_prescreen_k,
+    pp_key,
+    project_point,
+)
+from repro.runtime import BackgroundTuner
+
+
+def _grid_space(na, nb):
+    return ParamSpace(
+        [PerfParam("a", tuple(range(na))), PerfParam("b", tuple(range(nb)))]
+    )
+
+
+# ---------------------------------------------------------------------------
+# StagedSearch invariants
+# ---------------------------------------------------------------------------
+
+
+if given is not None:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        costs=st.lists(
+            st.floats(min_value=0.01, max_value=100, allow_nan=False),
+            min_size=2, max_size=16, unique=True,
+        ),
+        prescreen_seed=st.integers(0, 2**16),
+    )
+    def test_staged_with_full_k_equals_exhaustive(costs, prescreen_seed):
+        """ISSUE 3 satellite: with prescreen-k = |space| nothing is pruned,
+        so the staged result must be the exhaustive argmin of the measured
+        cost — for *any* prescreen ranking, however wrong (pseudorandom)."""
+        space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+        measured = lambda p: costs[p["i"]]
+        prescreen = lambda p: float((p["i"] * 2654435761 + prescreen_seed) % 97)
+        staged = StagedSearch(prescreen, k=space.size()).run(space, measured)
+        exhaustive = ExhaustiveSearch().run(space, measured)
+        assert staged.best.point == exhaustive.best.point
+        assert staged.best.cost == exhaustive.best.cost
+        assert staged.evaluations == exhaustive.evaluations
+        assert staged.prescreen_evaluations == len(costs)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        fa=st.lists(st.integers(0, 10**6), min_size=2, max_size=6, unique=True),
+        fb=st.lists(st.integers(0, 10**6), min_size=2, max_size=6, unique=True),
+        seed_a=st.integers(0, 5),
+        seed_b=st.integers(0, 5),
+    )
+    def test_warm_started_descent_never_worse_than_seed(fa, fb, seed_a, seed_b):
+        """ISSUE 3 satellite: a warm-started CoordinateDescent must never
+        return a point worse than the seed it started from (refinement is
+        monotone)."""
+        space = _grid_space(len(fa), len(fb))
+        seed = {"a": seed_a % len(fa), "b": seed_b % len(fb)}
+        cost = lambda p: float(fa[p["a"]] + fb[p["b"]])
+        res = CoordinateDescent(start=seed).run(space, cost)
+        assert res.best.cost <= cost(seed)
+
+
+def test_staged_full_k_equals_exhaustive_fixed_case():
+    """Deterministic companion to the property test (runs without
+    hypothesis): adversarial reversed prescreen, k = |space|."""
+    costs = [5.0, 0.5, 3.0, 4.0, 1.0, 2.0]
+    space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+    staged = StagedSearch(lambda p: -costs[p["i"]], k=space.size()).run(
+        space, lambda p: costs[p["i"]]
+    )
+    assert staged.best.point == {"i": 1}
+
+
+def test_warm_started_descent_never_worse_than_seed_fixed_case():
+    space = _grid_space(4, 4)
+    cost = lambda p: float((p["a"] * 7 + p["b"] * 13) % 11)  # non-separable
+    for seed in ({"a": 0, "b": 0}, {"a": 3, "b": 1}, {"a": 2, "b": 3}):
+        res = CoordinateDescent(start=seed).run(space, cost)
+        assert res.best.cost <= cost(seed)
+
+
+# ---------------------------------------------------------------------------
+# Collective parsing: -start/-done pairs count once (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_collective_bytes_counts_start_done_pairs_once():
+    """Async collectives appear as a ``-start``/``-done`` instruction pair
+    in HLO; only the ``-start`` (or the plain synchronous form) carries the
+    payload.  Pinned by the cleanup that removed the dead ``seen_done`` set:
+    ``-done`` lines must be skipped, never double-counted."""
+    from repro.core import collective_bytes_from_hlo
+
+    hlo = "\n".join([
+        "  %ag-start = (f32[128], f32[256]) all-gather-start(f32[128] %p0)",
+        "  %ag-done = f32[256] all-gather-done((f32[128], f32[256]) %ag-start)",
+        "  %ar = f32[64] all-reduce(f32[64] %p1), to_apply=%sum",
+        "  %cp-start = (f32[32], f32[32]) collective-permute-start(f32[32] %p2)",
+        "  %cp-done = f32[32] collective-permute-done((f32[32], f32[32]) %cp-start)",
+    ])
+    out = collective_bytes_from_hlo(hlo)
+    # all-gather: counted once, at -start (its declared result tuple)
+    assert out["all-gather"] == (128 + 256) * 4
+    assert out["all-reduce"] == 64 * 4
+    assert out["collective-permute"] == 32 * 2 * 4
+    # a lone synchronous op parses the same with or without async pairs
+    solo = "  %r = f32[16] all-reduce(f32[16] %x), to_apply=%sum"
+    assert collective_bytes_from_hlo(solo) == {"all-reduce": 16 * 4}
+
+
+def test_staged_measures_only_k_survivors():
+    space = _grid_space(5, 5)
+    true_cost = lambda p: float((p["a"] - 2) ** 2 + (p["b"] - 3) ** 2)
+    prescreen_calls, measured_calls = [], []
+
+    def prescreen(p):
+        prescreen_calls.append(dict(p))
+        return true_cost(p)
+
+    def measured(p):
+        measured_calls.append(dict(p))
+        return true_cost(p)
+
+    res = StagedSearch(prescreen, k=4).run(space, measured)
+    assert len(prescreen_calls) == 25  # stage 1: the full space
+    assert len(measured_calls) == 4   # stage 2: survivors only
+    assert res.best.point == {"a": 2, "b": 3}  # exact prescreen: argmin kept
+    assert res.evaluations == 4
+    assert res.prescreen_evaluations == 25
+
+
+def test_staged_seed_survives_hostile_prescreen():
+    """The warm-start seed must reach the measured finals even when the
+    prescreen ranks it dead last."""
+    space = ParamSpace([PerfParam("i", tuple(range(10)))])
+    seed = {"i": 7}
+    prescreen = lambda p: 0.0 if p["i"] != 7 else 1e9
+    measured = lambda p: 0.01 if p["i"] == 7 else 1.0
+    res = StagedSearch(prescreen, k=3, warm_start=seed).run(space, measured)
+    assert res.best.point == seed
+    # the seed *extends* the finals (k+1): it must not evict the k-th
+    # prescreen survivor, and none of the top-k are shadowed by it
+    assert res.evaluations == 4
+    assert {t.point["i"] for t in res.trials} == {7, 0, 1, 2}
+
+
+def test_staged_prescreen_failure_scores_inf_not_fatal():
+    space = ParamSpace([PerfParam("i", (0, 1, 2, 3))])
+
+    def prescreen(p):
+        if p["i"] == 1:
+            raise RuntimeError("lowering failed")
+        return float(p["i"])
+
+    res = StagedSearch(prescreen, k=2).run(space, lambda p: float(p["i"]))
+    assert res.best.point == {"i": 0}
+    assert {t.point["i"] for t in res.trials} == {0, 2}  # 1 was pruned to inf
+
+
+def test_default_prescreen_k_scaling():
+    assert default_prescreen_k(4) == 2
+    assert default_prescreen_k(16) == 4
+    assert default_prescreen_k(36) == 6
+    assert all(default_prescreen_k(n) >= 2 for n in range(1, 50))
+
+
+# ---------------------------------------------------------------------------
+# SuccessiveHalving: on_trial hook / resume parity (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_successive_halving_on_trial_records_every_evaluation():
+    space = ParamSpace([PerfParam("i", tuple(range(8)))])
+    seen = []
+    res = SuccessiveHalving(initial_budget=1, on_trial=seen.append).run(
+        space, lambda p, b: abs(p["i"] - 5) + 1.0 / b
+    )
+    assert len(seen) == res.evaluations == len(res.trials)
+    assert all(isinstance(t, Trial) for t in seen)
+    assert res.best.point["i"] == 5
+
+
+def test_successive_halving_interrupted_run_resumes_from_on_trial_writes():
+    """The fault-tolerance parity the hook exists for: a crash mid-rung loses
+    nothing that on_trial already persisted — the re-run skips re-measuring
+    those points exactly like ExhaustiveSearch resume does."""
+    space = ParamSpace([PerfParam("i", tuple(range(8)))])
+    persisted = {}  # the "DB": pp_key -> cost, written incrementally
+    measured = []
+    crash_after = [5]  # evaluations until the simulated crash; then unlimited
+
+    def cost(p, b):
+        key = pp_key(p)
+        if key in persisted:
+            return persisted[key]  # resumed: no re-measure
+        if len(measured) >= crash_after[0]:
+            raise KeyboardInterrupt  # crash mid-first-rung
+        measured.append(key)
+        return float(abs(p["i"] - 3))
+
+    record = lambda t: persisted.__setitem__(pp_key(t.point), t.cost)
+    with pytest.raises(KeyboardInterrupt):
+        SuccessiveHalving(initial_budget=1, on_trial=record).run(space, cost)
+    assert len(persisted) == 5  # every completed evaluation survived
+
+    crash_after[0] = len(measured) + 100  # the re-run completes
+    res = SuccessiveHalving(initial_budget=1, on_trial=record).run(space, cost)
+    assert res.best.point == {"i": 3}
+    # only the 3 never-measured points paid a fresh evaluation
+    assert len(measured) == 8
+
+
+def test_staged_delegates_to_prescreen_score_many():
+    """A prescreen exposing ``score_many`` (CompiledRooflineCost) owns the
+    scoring fan-out; StagedSearch must use it rather than re-pooling."""
+    space = ParamSpace([PerfParam("i", tuple(range(6)))])
+
+    class BatchPrescreen:
+        def __init__(self):
+            self.batches = []
+
+        def __call__(self, p):  # pragma: no cover - must not be used
+            raise AssertionError("score_many should have been called")
+
+        def score_many(self, points, max_workers=None):
+            self.batches.append(len(points))
+            return [float(p["i"]) for p in points]
+
+    pre = BatchPrescreen()
+    res = StagedSearch(pre, k=2).run(space, lambda p: float(p["i"]))
+    assert pre.batches == [6]
+    assert res.best.point == {"i": 0}
+    assert res.prescreen_evaluations == 6
+
+
+def test_successive_halving_budget_passes_through_tuner_path():
+    """ISSUE 3 satellite follow-through: a budget-aware cost behind
+    Tuner.tune must see SuccessiveHalving's doubling rung budgets — the DB
+    trial cache must not short-circuit re-measurement at higher budget."""
+    from repro.core import ATRegion, Tuner
+
+    space = ParamSpace([PerfParam("i", tuple(range(4)))])
+    region = ATRegion("r", space, lambda p: (lambda: p["i"]))
+    budgets_seen = []
+
+    def cost(point, budget=None):
+        budgets_seen.append((point["i"], budget))
+        return float(point["i"]) + 1.0 / (budget or 1)
+
+    cost.supports_budget = True
+    db = TuningDB()
+    res = Tuner(db).tune(
+        region, BasicParams.make(kernel="sh"), cost,
+        search=SuccessiveHalving(initial_budget=1),
+    )
+    assert res.best.point == {"i": 0}
+    # rung 1 measured all 4 at budget 1; later rungs re-measured the
+    # survivors at doubled budgets instead of returning cached rung-1 costs
+    assert [b for _, b in budgets_seen[:4]] == [1, 1, 1, 1]
+    assert max(b for _, b in budgets_seen) >= 2
+    assert db.trial_cost(BasicParams.make(kernel="sh"), {"i": 0}) is not None
+
+
+# ---------------------------------------------------------------------------
+# Adaptive wall-clock timing
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_cost_abandons_clear_losers_early():
+    sleep_s = {0: 0.001, 1: 0.03, 2: 0.03, 3: 0.03}
+    import time as _time
+
+    def build(point):
+        return lambda: _time.sleep(sleep_s[point["i"]])
+
+    cost = AdaptiveWallClockCost(build, warmup=0, min_repeats=1, max_repeats=6)
+    assert cost.supports_budget
+    c0 = cost({"i": 0})  # incumbent
+    runs_before = cost.timed_runs
+    c1 = cost({"i": 1})  # 30x worse: must stop after one timed run
+    assert cost.timed_runs - runs_before == 1
+    assert c1 > c0
+    assert cost.incumbent == pytest.approx(c0)
+    assert cost.measured_points == 2
+
+
+def test_adaptive_cost_budget_scales_repeat_cap():
+    calls = []
+
+    def build(point):
+        return lambda: calls.append(1)
+
+    cost = AdaptiveWallClockCost(build, warmup=0, min_repeats=2, max_repeats=2)
+    cost({"i": 0})
+    n1 = len(calls)
+    cost({"i": 0}, budget=3)  # equal-cost point: CI never separates -> cap
+    assert len(calls) - n1 >= n1  # budget raised the cap
+
+
+# ---------------------------------------------------------------------------
+# Nearest-shape-class query + PP projection (warm-start plumbing)
+# ---------------------------------------------------------------------------
+
+
+def test_nearest_tuned_prefers_closest_bucket_same_kernel():
+    db = TuningDB()
+    for seq, point in ((128, {"block": 1}), (1024, {"block": 2})):
+        db.record_best(
+            BasicParams.make(kernel="k", seq=seq), point, 1.0, "before_execution"
+        )
+    db.record_best(
+        BasicParams.make(kernel="other", seq=256), {"block": 9}, 0.1,
+        "before_execution",
+    )
+    near = db.nearest_tuned(BasicParams.make(kernel="k", seq=256))
+    assert near["point"] == {"block": 1}  # 1 bucket away beats 2, kernel-matched
+    assert near["distance"] == pytest.approx(1.0)
+
+
+def test_nearest_tuned_ignores_self_and_non_final():
+    db = TuningDB()
+    bp = BasicParams.make(kernel="k", seq=256)
+    db.record_best(bp, {"i": 0}, 1.0, "before_execution")
+    assert db.nearest_tuned(bp) is None  # own entry never matches
+    sibling = BasicParams.make(kernel="k", seq=512)
+    db.record_trial(sibling, {"i": 1}, 1.0, "before_execution")  # interim only
+    assert db.nearest_tuned(bp) is None  # non-final bests don't seed
+    db.record_best(sibling, {"i": 1}, 1.0, "before_execution")
+    assert db.nearest_tuned(bp)["point"] == {"i": 1}
+
+
+def test_nearest_tuned_requires_match_key():
+    db = TuningDB()
+    db.record_best(
+        BasicParams.make(kernel="k", seq=128), {"i": 0}, 1.0, "before_execution"
+    )
+    assert db.nearest_tuned(BasicParams.make(arch="no-kernel-key")) is None
+
+
+def test_project_point_matches_json_roundtripped_tuple_values():
+    """A disk-loaded seed carries JSON lists where domains hold tuples; the
+    projection must still recognize the exact match (not degrade to the
+    default)."""
+    space = ParamSpace(
+        [PerfParam("exchange", ((1, 2), (3, 4))), PerfParam("n", (1, 2))]
+    )
+    projected = project_point(space, {"exchange": [3, 4], "n": 2})
+    assert projected == {"exchange": (3, 4), "n": 2}
+
+
+def test_project_point_snaps_and_validates():
+    space = ParamSpace(
+        [PerfParam("block", (128, 256, 512)), PerfParam("variant", ("x", "y"))]
+    )
+    # in-domain values survive; foreign numerics snap to the nearest candidate
+    assert project_point(space, {"block": 512, "variant": "y"}) == {
+        "block": 512, "variant": "y",
+    }
+    assert project_point(space, {"block": 300, "variant": "z"}) == {
+        "block": 256, "variant": "x",  # 300 -> nearest 256, z -> default
+    }
+    assert project_point(space, {"variant": "y"})["block"] == 128  # missing -> default
+    constrained = ParamSpace(
+        [PerfParam("block", (128, 256))], constraint=lambda p: p["block"] < 200
+    )
+    assert project_point(constrained, {"block": 250}) is None  # infeasible seed
+
+
+# ---------------------------------------------------------------------------
+# AutotunedOp integration: staged default + cross-class warm start
+# ---------------------------------------------------------------------------
+
+
+def _staged_spec(calls, prescreen_calls, name="staged_toy", na=4, nb=4):
+    """Spec with a separable measured cost and an exact analytic prescreen."""
+    space = _grid_space(na, nb)
+    true_cost = lambda p: float((p["a"] - 1) ** 2 + (p["b"] - 2) ** 2 + 1)
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            calls.append((dict(point), threading.get_ident()))
+            return true_cost(point)
+
+        return cost
+
+    def prescreen_factory(region, bp, args, kwargs):
+        def prescreen(point):
+            prescreen_calls.append(dict(point))
+            return true_cost(point)
+
+        return prescreen
+
+    return KernelSpec(
+        name,
+        make_region=lambda bp: ATRegion(name, space, lambda p: (lambda x: x)),
+        shape_class=lambda x: BasicParams.make(kernel=name, n=int(x.shape[0])),
+        cost_factory=cost_factory,
+        prescreen_factory=prescreen_factory,
+    )
+
+
+def test_autotuned_op_stages_by_default_with_prescreen_factory():
+    calls, pres = [], []
+    op = AutotunedOp(_staged_spec(calls, pres), db=TuningDB(), prescreen_k=3)
+    state = op.resolve(jnp.ones(4))
+    assert len(pres) == 16          # stage 1: full space, never measured
+    assert len(calls) == 3          # stage 2: top-k survivors only
+    assert state.cost_evaluations == 3
+    assert state.prescreen_evaluations == 16
+    assert state.region.selected == {"a": 1, "b": 2}  # exact prescreen: argmin
+    assert op.db.tuned_point(state.bp) == {"a": 1, "b": 2}  # final: no re-tune
+
+
+def test_autotuned_op_staged_false_disables_pipeline():
+    calls, pres = [], []
+    op = AutotunedOp(
+        _staged_spec(calls, pres), db=TuningDB(), staged=False, warm_start=False
+    )
+    op.resolve(jnp.ones(4))
+    assert pres == []
+    assert len(calls) == 16  # plain exhaustive
+
+
+def test_autotuned_op_warm_starts_sibling_shape_class():
+    calls, pres = [], []
+    spec = _staged_spec(calls, pres)
+    db = TuningDB()
+    AutotunedOp(spec, db=db, prescreen_k=3).resolve(jnp.ones(4))
+    n_first = len(calls)
+
+    # second shape class, same kernel: staged again but seeded by the
+    # sibling's winner — the seed leads the finals
+    op2 = AutotunedOp(spec, db=db, prescreen_k=3)
+    state2 = op2.resolve(jnp.ones(8))
+    assert state2.warm_seed == {"a": 1, "b": 2}
+    assert state2.region.selected == {"a": 1, "b": 2}
+    assert len(calls) - n_first == 3  # refinement run, not a full sweep
+
+    # and with the pipeline off, the warm start alone turns the sweep into
+    # a seeded hillclimb that never does worse than the seed
+    calls3, pres3 = [], []
+    spec3 = _staged_spec(calls3, pres3)
+    db3 = TuningDB()
+    AutotunedOp(spec3, db=db3, staged=False, warm_start=False).resolve(jnp.ones(4))
+    full_sweep = len(calls3)
+    op3 = AutotunedOp(spec3, db=db3, staged=False)
+    state3 = op3.resolve(jnp.ones(8))
+    assert state3.warm_seed == {"a": 1, "b": 2}
+    assert len(calls3) - full_sweep < full_sweep  # CD refinement < exhaustive
+    assert state3.region.selected == {"a": 1, "b": 2}
+
+
+def test_staged_measured_stage_reuses_prescreen_executables():
+    """The roofline prescreen compiles every candidate; the measured finals
+    must execute those retained artifacts instead of instantiating (and
+    recompiling) the survivors a second time."""
+    from repro.core import roofline_prescreen
+
+    space = ParamSpace([PerfParam("i", tuple(range(9)))])
+    instantiated = []
+
+    def instantiate(point):
+        instantiated.append(point["i"])
+        scale = float(point["i"] + 1)
+        return lambda x: x * scale
+
+    spec = KernelSpec(
+        "reuse_toy",
+        make_region=lambda bp: ATRegion("reuse_toy", space, instantiate),
+        shape_class=lambda x: BasicParams.make(kernel="reuse_toy"),
+        prescreen_factory=roofline_prescreen,
+    )
+    op = AutotunedOp(
+        spec, db=TuningDB(), warm=False, warm_start=False, prescreen_k=3
+    )
+    state = op.resolve(jnp.ones(8))
+    assert state.prescreen_evaluations == 9
+    assert state.cost_evaluations == 3
+    # one instantiate per candidate (the prescreen's lowering); the three
+    # measured survivors ran the prescreen's compiled executables
+    assert len(instantiated) == 9
+
+
+def test_background_tuner_runs_staged_pipeline_off_hot_path():
+    """The pipeline as the background tuner's default: prescreen + measured
+    finals + warm start all happen on the worker thread; the submit thread
+    still performs zero evaluations of either stage."""
+    calls, pres = [], []
+    op = AutotunedOp(
+        _staged_spec(calls, pres), db=TuningDB(), tune=False, prescreen_k=3
+    )
+    with BackgroundTuner() as tuner:
+        state = tuner.submit(op, jnp.ones(4))
+        assert tuner.drain(timeout=60)
+        assert state.tuned
+        assert tuner.background_evaluations == 3
+        assert tuner.prescreen_evaluations == 16
+        me = threading.get_ident()
+        assert all(t != me for _, t in calls)
+        # a sibling class submitted later warm-starts from the first winner
+        state2 = tuner.submit(op, jnp.ones(8))
+        assert tuner.drain(timeout=60)
+        assert state2.warm_seed is not None
+        assert tuner.warm_started_labels == [op.spec.name]
+    assert tuner.errors == []
