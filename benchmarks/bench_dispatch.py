@@ -1,0 +1,98 @@
+"""Dispatch-overhead microbenchmark: slow resolution vs the fast path.
+
+Before this PR every ``AutotunedOp`` call paid full shape-class resolution:
+extract the BP from the call arguments, JSON-serialize + SHA-256 it into a
+fingerprint, take the state lock, walk to the state, then ``pp_key`` the
+selection into the candidate table.  Once a shape class is *final* none of
+that can change the answer, so dispatch now collapses to one dict lookup on
+a structural key (docs/program.md).
+
+This bench times exactly the dispatch decision (``op.dispatch`` returns the
+callable without executing it) for a finalized shape class:
+
+* ``slow`` — an op with ``fast_dispatch=False`` over the same tuned DB: the
+  pre-PR per-call path (resolution is a cache hit — no tuning is timed);
+* ``fast`` — the fast path: structural key → dict hit → bound callable.
+
+Gate (raise when missed; CI re-checks against
+``benchmarks/baselines/dispatch.json``): fast dispatch must be **>= 10x**
+cheaper per call.  Both sides are pure Python measured best-of-``REPS`` over
+``CALLS`` calls, so the ratio is stable across machines.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import emit
+
+CALLS = 4000
+REPS = 5
+MIN_SPEEDUP = 10.0
+
+
+def _toy_op(db):
+    from repro.core import (
+        ATRegion, AutotunedOp, BasicParams, KernelSpec, ParamSpace, PerfParam,
+    )
+
+    space = ParamSpace([PerfParam("i", (0, 1, 2, 3))])
+    spec = KernelSpec(
+        "bench_dispatch_toy",
+        make_region=lambda bp: ATRegion(
+            "bench_dispatch_toy", space, lambda p: (lambda x: x)
+        ),
+        shape_class=lambda x: BasicParams.make(
+            kernel="bench_dispatch_toy", n=int(x.shape[0]), dtype=str(x.dtype)
+        ),
+        cost_factory=lambda r, b, a, k: (lambda p: float(p["i"]) + 1.0),
+    )
+    return AutotunedOp(spec, db=db, warm=False, monitor=False)
+
+
+def _per_call(fn, x) -> float:
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        for _ in range(CALLS):
+            fn(x)
+        best = min(best, (time.perf_counter() - t0) / CALLS)
+    return best
+
+
+def run() -> None:
+    import jax.numpy as jnp
+
+    from repro.core import TuningDB
+
+    db = TuningDB()
+    x = jnp.ones(8)
+
+    fast_op = _toy_op(db)
+    fast_op(x)  # tune + finalize: installs the fast route
+    assert fast_op._fast, "shape class did not finalize into the fast path"
+
+    slow_op = _toy_op(db)  # same tuned DB: resolution is a pure cache hit
+    slow_op.fast_dispatch = False
+    slow_op.dispatch(x)  # materialize the state once (not timed)
+
+    fast_s = _per_call(fast_op.dispatch, x)
+    slow_s = _per_call(slow_op.dispatch, x)
+    speedup = slow_s / fast_s
+
+    emit("dispatch/slow", slow_s, "per-call full shape-class resolution")
+    emit("dispatch/fast", fast_s, "per-call finalized dict-lookup dispatch")
+    emit(
+        "dispatch/summary", fast_s,
+        f"speedup={speedup:.1f};min={MIN_SPEEDUP:.0f}"
+        f";slow_us={slow_s * 1e6:.2f};fast_us={fast_s * 1e6:.2f}",
+    )
+    if speedup < MIN_SPEEDUP:
+        raise RuntimeError(
+            "fast dispatch missed its acceptance gate: "
+            f"{speedup:.1f}x < {MIN_SPEEDUP:.0f}x "
+            f"(slow={slow_s * 1e6:.2f}us fast={fast_s * 1e6:.2f}us)"
+        )
+
+
+if __name__ == "__main__":
+    run()

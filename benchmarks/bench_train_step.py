@@ -1,0 +1,197 @@
+"""End-to-end train-step benchmark: untuned vs per-kernel-greedy vs joint.
+
+The paper's headline 1.801x is a whole-application number; this bench
+measures the analogous property of our joint tuner (docs/program.md): for
+each shape config it times one *full* train step under
+
+* ``untuned``  — the config defaults (microbatch degree 1, configured remat);
+* ``greedy``   — each program member tuned in isolation against the measured
+  step (the per-kernel-greedy composition, PRs 1–3's strategy);
+* ``joint``    — the :class:`~repro.core.program.JointSearch` winner over
+  the member product, measured end to end.
+
+Every composition's cost comes from the *same* joint-search trial table
+(the search always evaluates the greedy and untuned compositions), so the
+``joint <= greedy`` gate is a construction property of argmin-over-superset
+— it can never flake on machine noise.
+
+A deterministic ``interference`` config (an analytic cost with a
+cross-member interaction: each knob alone prefers its default, the
+composition prefers both flipped) proves the *strict* improvement case —
+per-member greedy provably cannot find the joint optimum there.
+
+Gates (raise, failing the run, when missed; CI re-checks them against
+``benchmarks/baselines/train_step.json`` via
+``scripts/check_bench_regression.py``):
+
+* joint cost <= greedy cost on every config;
+* joint cost < greedy cost on the interference config (strict).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import emit
+
+# real-step shape configs: (label, global_batch, seq_len)
+SHAPE_CONFIGS = (
+    ("b4s32", 4, 32),
+    ("b8s16", 8, 16),
+)
+
+ARCH = "tinyllama-1.1b"
+
+
+def _member_greedy_tune(program, db, counter: Dict[str, int]) -> None:
+    """Tune each member in isolation (others at defaults): the greedy stage."""
+    from repro.core import AdaptiveWallClockCost, Tuner
+
+    defaults = {m.name: dict(m.region.selected) for m in program.members}
+    for member in program.members:
+        def build(point, _member=member):
+            assignment = {name: dict(sub) for name, sub in defaults.items()}
+            assignment[_member.name] = dict(point)
+            return program.build_executable(assignment)
+
+        inner = AdaptiveWallClockCost(build, warmup=1, min_repeats=1, max_repeats=3)
+
+        def cost(point, _inner=inner):
+            counter["evals"] += 1
+            return _inner(point)
+
+        Tuner(db).tune(member.region, member.bp, cost, select=False)
+
+
+def _flat(assignment) -> Dict:
+    from repro.core import flatten_assignment
+
+    return flatten_assignment(assignment)
+
+
+def _run_real_config(label: str, batch: int, seq: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import TuningDB
+    from repro.data import SyntheticLMDataset
+    from repro.optim import AdamWConfig
+    from repro.runtime import Trainer, TrainLoopConfig
+
+    cfg = get_config(ARCH, smoke=True)
+    db = TuningDB()
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10),
+        TrainLoopConfig(
+            total_steps=1, n_microbatches=1, microbatch_candidates=(1, 2),
+        ),
+        tuning_db=db,
+    )
+    ds = SyntheticLMDataset(cfg, global_batch=batch, seq_len=seq, seed=7)
+    example = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+    params, opt_state = trainer.init_state(jax.random.PRNGKey(0))
+    program = trainer.train_program(params, opt_state, example)
+
+    untuned = {m.name: dict(m.region.selected) for m in program.members}
+    greedy_counter = {"evals": 0}
+    _member_greedy_tune(program, db, greedy_counter)
+    greedy = program.greedy_composition()
+
+    result = program.tune(cap=None)  # exhaustive over the (tiny) product
+    bp = program.fingerprint()
+    joint_cost = float(result.cost)
+    greedy_cost = db.trial_cost(bp, _flat(greedy))
+    untuned_cost = db.trial_cost(bp, _flat(untuned))
+    assert greedy_cost is not None and untuned_cost is not None, (
+        "joint search must evaluate the greedy and untuned compositions"
+    )
+
+    emit(f"train_step/{label}/untuned", untuned_cost,
+         f"point={_flat(untuned)}")
+    emit(f"train_step/{label}/greedy", greedy_cost,
+         f"point={_flat(greedy)};evals={greedy_counter['evals']}")
+    emit(
+        f"train_step/{label}/joint", joint_cost,
+        f"point={result.point};evals={result.evaluations}"
+        f";vs_greedy={joint_cost / greedy_cost:.3f}"
+        f";vs_untuned={joint_cost / untuned_cost:.3f}",
+    )
+    return joint_cost, greedy_cost
+
+
+def _run_interference_config():
+    """Deterministic analytic program where greedy provably loses.
+
+    Two members, each domain {1, 2}; the cost has an interaction term:
+    flipping either knob alone regresses, flipping both wins — the shape of
+    shared-resource coupling (two kernels that individually prefer large
+    blocks but together thrash the same cache).  Coordinate-greedy from the
+    default composition stays at (1, 1); only the joint search reaches
+    (2, 2).
+    """
+    from repro.core import (
+        ATRegion, BasicParams, ParamSpace, PerfParam, ProgramMember,
+        ProgramSpec, Tuner, TuningDB,
+    )
+
+    table = {(1, 1): 1.0, (1, 2): 1.2, (2, 1): 1.2, (2, 2): 0.7}
+    ra = ATRegion("a", ParamSpace([PerfParam("x", (1, 2))]), lambda p: (lambda: p))
+    rb = ATRegion("b", ParamSpace([PerfParam("y", (1, 2))]), lambda p: (lambda: p))
+    db = TuningDB()
+    program = ProgramSpec(
+        "interference",
+        [
+            ProgramMember("a", ra, bp=BasicParams.make(kernel="ia")),
+            ProgramMember("b", rb, bp=BasicParams.make(kernel="ib")),
+        ],
+        db=db,
+    )
+    # greedy: each member tuned alone, the other at its default
+    Tuner(db).tune(ra, program.members[0].bp,
+                   lambda p: table[(p["x"], 1)], select=False)
+    Tuner(db).tune(rb, program.members[1].bp,
+                   lambda p: table[(1, p["y"])], select=False)
+    greedy = program.greedy_composition()
+    greedy_cost = table[(greedy["a"]["x"], greedy["b"]["y"])]
+
+    result = program.tune(
+        cost=lambda pt, budget=None: table[(pt["a.x"], pt["b.y"])], cap=None,
+    )
+    joint_cost = float(result.cost)
+    emit("train_step/interference/greedy", greedy_cost, f"point={_flat(greedy)}")
+    emit(
+        "train_step/interference/joint", joint_cost,
+        f"point={result.point};evals={result.evaluations}"
+        f";vs_greedy={joint_cost / greedy_cost:.3f}",
+    )
+    return joint_cost, greedy_cost
+
+
+def run() -> None:
+    results = {}
+    for label, batch, seq in SHAPE_CONFIGS:
+        results[label] = _run_real_config(label, batch, seq)
+    results["interference"] = _run_interference_config()
+
+    violations = {
+        label: (j, g) for label, (j, g) in results.items() if j > g
+    }
+    strict = sum(1 for j, g in results.values() if j < g)
+    joint_le_greedy = int(not violations)
+    emit(
+        "train_step/summary",
+        sum(j for j, _ in results.values()),
+        f"joint_le_greedy={joint_le_greedy};strict={strict}"
+        f";configs={len(results)}",
+    )
+    if violations or results["interference"][0] >= results["interference"][1]:
+        raise RuntimeError(
+            "joint tuning missed its acceptance gate: "
+            f"joint>greedy on {sorted(violations)}; interference strict "
+            f"improvement={results['interference']}"
+        )
+
+
+if __name__ == "__main__":
+    run()

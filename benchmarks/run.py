@@ -20,11 +20,13 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (
+        bench_dispatch,
         bench_fig11_loop_exchange,
         bench_fig12_degree_switch,
         bench_fig13_14_combined,
         bench_roofline,
         bench_serve_traffic,
+        bench_train_step,
         bench_tune_throughput,
         common,
     )
@@ -37,6 +39,8 @@ def main() -> None:
         bench_roofline,
         bench_serve_traffic,
         bench_tune_throughput,
+        bench_train_step,
+        bench_dispatch,
     ):
         try:
             mod.run()

@@ -1,17 +1,24 @@
 #!/usr/bin/env python
-"""Gate the tuning-throughput perf trajectory against its committed baseline.
+"""Gate the perf trajectory against its committed baselines.
 
 Reads the machine-readable bench record (``BENCH_results.json``, written by
 ``python -m benchmarks.run``; override with ``BENCH_JSON`` or argv[1]) and
-compares the staged pipeline's measured-evaluation counts from the
-``tune_throughput/<kernel>/staged`` rows against
-``benchmarks/baselines/tune_throughput.json``.
+checks three gates against ``benchmarks/baselines/``:
 
-Fails (exit 1) when any kernel's measured-evaluation count — or the total —
-regresses more than ``max_regression`` (default 1.2, i.e. >20%) over the
-committed baseline, or when a baselined kernel is missing from the record.
-Counts are deterministic (prescreen-k per kernel), so this never flakes on
-machine noise; improvements print a reminder to re-commit the baseline.
+* **tune_throughput.json** — the staged pipeline's measured-evaluation
+  counts (``tune_throughput/<kernel>/staged`` rows) must stay within
+  ``max_regression`` (default >20% fails) of the committed counts;
+* **train_step.json** — the whole-program joint tuner
+  (``train_step/summary``) must report ``joint_le_greedy=1`` and at least
+  ``min_strict_configs`` configs where joint beats greedy strictly;
+* **dispatch.json** — the finalized-dispatch fast path
+  (``dispatch/summary``) must report at least ``min_speedup`` (10x) lower
+  per-call overhead than full shape-class resolution.
+
+Every gated quantity is either a deterministic count/flag or a
+back-to-back ratio of like timings, so none of the gates flake on machine
+noise; improvements print a reminder to re-commit the baseline.
+Fails (exit 1) listing every violated gate or missing baselined row.
 """
 from __future__ import annotations
 
@@ -22,10 +29,23 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-BASELINE = ROOT / "benchmarks" / "baselines" / "tune_throughput.json"
+BASELINES = ROOT / "benchmarks" / "baselines"
 
 ROW_RE = re.compile(r"^tune_throughput/(?P<kernel>[\w.\-]+)/staged$")
 EVALS_RE = re.compile(r"(?:^|;)evals=(\d+)")
+
+
+def _derived_fields(record: dict, name: str) -> dict:
+    """``key=value`` pairs from the named row's derived column, or None."""
+    for row in record.get("rows", []):
+        if row.get("name") == name:
+            out = {}
+            for part in str(row.get("derived", "")).split(";"):
+                k, _, v = part.partition("=")
+                if _:
+                    out[k] = v
+            return out
+    return None
 
 
 def staged_evals(record: dict) -> dict:
@@ -40,26 +60,13 @@ def staged_evals(record: dict) -> dict:
     return out
 
 
-def main() -> int:
-    bench_path = Path(
-        sys.argv[1] if len(sys.argv) > 1
-        else os.environ.get("BENCH_JSON", "BENCH_results.json")
-    )
-    if not bench_path.exists():
-        print(f"check_bench_regression: {bench_path} not found "
-              "(run `python -m benchmarks.run` first)", file=sys.stderr)
-        return 1
-    with open(bench_path) as f:
-        record = json.load(f)
-    with open(BASELINE) as f:
+def check_tune_throughput(record: dict, problems: list, improved: list) -> str:
+    with open(BASELINES / "tune_throughput.json") as f:
         baseline = json.load(f)
-
     limit = float(baseline.get("max_regression", 1.2))
     expected = baseline["staged_evals"]
     actual = staged_evals(record)
 
-    problems = []
-    improved = []
     for kernel, base in expected.items():
         got = actual.get(kernel)
         if got is None:
@@ -78,6 +85,74 @@ def main() -> int:
         problems.append(
             f"total measured evaluations regressed {base_total} -> {total}"
         )
+    return f"tune_throughput: {total} measured evals (baseline {base_total})"
+
+
+def check_train_step(record: dict, problems: list) -> str:
+    with open(BASELINES / "train_step.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "train_step/summary")
+    if fields is None:
+        problems.append("train_step: no train_step/summary row in record")
+        return "train_step: missing"
+    if baseline.get("require_joint_le_greedy", True) and fields.get(
+        "joint_le_greedy"
+    ) != "1":
+        problems.append(
+            "train_step: joint-tuned step cost exceeded the per-kernel-greedy "
+            f"composition (joint_le_greedy={fields.get('joint_le_greedy')})"
+        )
+    strict = int(fields.get("strict", 0))
+    if strict < int(baseline.get("min_strict_configs", 1)):
+        problems.append(
+            f"train_step: joint strictly better on only {strict} config(s) "
+            f"(need >= {baseline.get('min_strict_configs', 1)})"
+        )
+    configs = int(fields.get("configs", 0))
+    if configs < int(baseline.get("min_configs", 1)):
+        problems.append(
+            f"train_step: only {configs} config(s) benchmarked "
+            f"(need >= {baseline.get('min_configs', 1)})"
+        )
+    return f"train_step: strict joint wins on {strict}/{configs} configs"
+
+
+def check_dispatch(record: dict, problems: list) -> str:
+    with open(BASELINES / "dispatch.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "dispatch/summary")
+    if fields is None:
+        problems.append("dispatch: no dispatch/summary row in record")
+        return "dispatch: missing"
+    speedup = float(fields.get("speedup", 0.0))
+    floor = float(baseline.get("min_speedup", 10.0))
+    if speedup < floor:
+        problems.append(
+            f"dispatch: fast-path speedup {speedup:.1f}x below the "
+            f"{floor:.0f}x gate"
+        )
+    return f"dispatch: {speedup:.1f}x over slow resolution"
+
+
+def main() -> int:
+    bench_path = Path(
+        sys.argv[1] if len(sys.argv) > 1
+        else os.environ.get("BENCH_JSON", "BENCH_results.json")
+    )
+    if not bench_path.exists():
+        print(f"check_bench_regression: {bench_path} not found "
+              "(run `python -m benchmarks.run` first)", file=sys.stderr)
+        return 1
+    with open(bench_path) as f:
+        record = json.load(f)
+
+    problems: list = []
+    improved: list = []
+    summaries = [
+        check_tune_throughput(record, problems, improved),
+        check_train_step(record, problems),
+        check_dispatch(record, problems),
+    ]
 
     for p in problems:
         print(f"REGRESSION: {p}", file=sys.stderr)
@@ -85,8 +160,7 @@ def main() -> int:
         print("improvement — consider re-committing the baseline: "
               + ", ".join(improved))
     if not problems:
-        print(f"bench regression check OK: {total} measured evaluations "
-              f"(baseline {base_total}, limit {limit:.0%})")
+        print("bench regression check OK: " + "; ".join(summaries))
     return 1 if problems else 0
 
 

@@ -18,6 +18,9 @@ Public API:
   :class:`~repro.core.registry.KernelSpec` /
   :class:`~repro.core.autotuned.AutotunedOp` — the process-wide autotuned-op
   registry with a persistent cross-run cache (docs/registry.md).
+* :class:`~repro.core.program.ProgramSpec` /
+  :class:`~repro.core.program.JointSearch` — whole-program joint autotuning
+  over composed regions, measured end to end (docs/program.md).
 """
 from .cost import (
     FX100,
@@ -43,6 +46,14 @@ from .exchange import (
 )
 from .autotuned import AutotunedOp, OpState
 from .params import BasicParams, ParamSpace, PerfParam, pp_key, project_point
+from .program import (
+    JointSearch,
+    ProgramMember,
+    ProgramResult,
+    ProgramSpec,
+    flatten_assignment,
+    unflatten_point,
+)
 from .region import ATRegion
 from .registry import (
     REGISTRY,
@@ -89,6 +100,12 @@ __all__ = [
     "TrafficClass",
     "PHASES",
     "bucket_pow2",
+    "ProgramSpec",
+    "ProgramMember",
+    "ProgramResult",
+    "JointSearch",
+    "flatten_assignment",
+    "unflatten_point",
     "Tuner",
     "RuntimeSelector",
     "TuningDB",

@@ -49,6 +49,68 @@ class TrialBudgetExhausted(Exception):
     """Raised internally when a search hits its evaluation budget."""
 
 
+# Upper bound on fast-dispatch routes per op.  Structural keys include
+# hashable scalar argument *values*, so an op called with an unbounded
+# stream of distinct scalars (a step counter, say) would otherwise leak one
+# entry per value; past the limit new keys simply stay on the slow path
+# (correct, just not collapsed), while the bounded _states cache still
+# dedupes by shape class.
+FAST_TABLE_LIMIT = 512
+
+
+class _FastEntry:
+    """One finalized dispatch route: structural arg key -> bound callable.
+
+    ``version`` mirrors the region's selection version at bind time; a
+    RuntimeSelector demotion or joint-program hot apply bumps the region's
+    version, and the next fast call rebinds with one dict lookup — the
+    finalized class never re-enters the slow path (no BP extraction, no
+    lock, no selector walk).
+    """
+
+    __slots__ = ("fn", "state", "region", "version", "calls")
+
+    def __init__(self, fn: Callable[..., Any], state: "OpState", version: int) -> None:
+        self.fn = fn
+        self.state = state
+        self.region = state.region
+        self.version = version
+        self.calls = 0
+
+
+def _arg_sig(a: Any) -> Any:
+    """Cheap structural signature of one call argument (shape-class safe).
+
+    Arrays key on (shape, dtype); containers recurse; hashable scalars key
+    on value.  Raises TypeError for anything else — the caller falls back
+    to the slow path rather than guessing.
+    """
+    try:
+        return (a.shape, a.dtype)  # the hot case: arrays
+    except AttributeError:
+        pass
+    if isinstance(a, (int, float, str, bool, bytes)) or a is None:
+        return a
+    if isinstance(a, dict):
+        return tuple(sorted((k, _arg_sig(v)) for k, v in a.items()))
+    if isinstance(a, (list, tuple)):
+        return tuple(map(_arg_sig, a))
+    raise TypeError(f"unkeyable dispatch argument: {type(a)!r}")
+
+
+def _fast_key(args: tuple, kwargs: dict) -> Optional[tuple]:
+    """Structural dispatch key, or ``None`` when args cannot be keyed."""
+    try:
+        if kwargs:
+            return (
+                tuple(map(_arg_sig, args)),
+                tuple(sorted((k, _arg_sig(v)) for k, v in kwargs.items())),
+            )
+        return tuple(map(_arg_sig, args))
+    except TypeError:
+        return None
+
+
 @dataclass
 class OpState:
     """Everything the op holds for one shape class."""
@@ -92,6 +154,8 @@ class AutotunedOp:
         staged: Optional[bool] = None,
         prescreen_k: Optional[int] = None,
         warm_start: bool = True,
+        fast_dispatch: bool = True,
+        monitor_every: int = 64,
     ) -> None:
         self.spec = spec
         self._registry = registry
@@ -111,6 +175,16 @@ class AutotunedOp:
         self.staged = staged
         self.prescreen_k = prescreen_k
         self.warm_start = warm_start
+        # zero-overhead dispatch (docs/program.md): once a shape class is
+        # *final* (completed search in the DB), calls collapse to one dict
+        # lookup on a structural key — no BP extraction, no fingerprint
+        # hash, no lock.  Value-dependent class extraction (traffic-class
+        # specs bucket on runtime scalars) cannot be keyed structurally, so
+        # those ops stay on the slow path.
+        self.fast_dispatch = fast_dispatch and spec.traffic_class is None
+        self.monitor_every = max(1, monitor_every)
+        self._fast: Dict[tuple, _FastEntry] = {}
+        self.slow_resolutions = 0  # full shape-class resolutions performed
         self._states: Dict[str, OpState] = {}
         self._state_lock = threading.Lock()  # guards the two dicts below
         self._build_locks: Dict[str, threading.Lock] = {}
@@ -127,14 +201,106 @@ class AutotunedOp:
         return self._db
 
     def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        if self._fast:
+            entry = self._fast_lookup(args, kwargs)
+            if entry is not None:
+                entry.calls += 1
+                if self.monitor and entry.calls % self.monitor_every == 0:
+                    # a trickle of run-time-layer observations keeps the
+                    # straggler watch alive without per-call timing; still
+                    # no BP extraction, no lock, no re-resolution
+                    return self._monitored(entry.state, args, kwargs)
+                return entry.fn(*args, **kwargs)
         state = self.resolve(*args, **kwargs)
+        self._maybe_install_fast(state, args, kwargs)
         if not self.monitor or state.selector is None:
+            return state.region(*args, **kwargs)
+        return self._monitored(state, args, kwargs)
+
+    def dispatch(self, *args: Any, **kwargs: Any) -> Callable[..., Any]:
+        """The callable this call would execute — dispatch decision only.
+
+        On the fast path this is a single dict lookup; otherwise a full
+        resolution (tuning on a miss, like ``__call__``).  The dispatch
+        microbenchmark times exactly this.
+        """
+        if self._fast:
+            entry = self._fast_lookup(args, kwargs)
+            if entry is not None:
+                return entry.fn
+        state = self.resolve(*args, **kwargs)
+        self._maybe_install_fast(state, args, kwargs)
+        return state.region.candidate(state.region.selected)
+
+    def finalize(self, state: OpState, *args: Any, **kwargs: Any) -> bool:
+        """Install the fast dispatch route for ``state`` and these args.
+
+        Used by callers that pin or hot-apply a selection outside a
+        completed per-kernel search (joint program winners): the class is
+        final *by decree*, so dispatch may collapse even though the op's
+        own DB entry never finished a search.
+        """
+        if not self.fast_dispatch:
+            return False
+        key = _fast_key(args, kwargs)
+        if key is None:
+            return False
+        region = state.region
+        version = region.version  # pre-read: same stale-pin guard as
+        # _fast_lookup — a concurrent select() just forces one extra rebind
+        entry = _FastEntry(region.candidate(region.selected), state, version)
+        with self._state_lock:
+            if key not in self._fast and len(self._fast) >= FAST_TABLE_LIMIT:
+                return False  # bounded: overflow keys keep the slow path
+            self._fast[key] = entry
+        return True
+
+    def _monitored(self, state: OpState, args: tuple, kwargs: dict) -> Any:
+        if state.selector is None:
             return state.region(*args, **kwargs)
         t0 = time.perf_counter()
         out = state.region(*args, **kwargs)
         jax.block_until_ready(out)
         state.selector.observe(time.perf_counter() - t0)
         return out
+
+    def _fast_lookup(self, args: tuple, kwargs: dict) -> Optional[_FastEntry]:
+        # flat on purpose: this is the measured per-call overhead, so the
+        # key is built inline (no helper-call tower) and misses bail early
+        try:
+            if kwargs:
+                key = (
+                    tuple(map(_arg_sig, args)),
+                    tuple(sorted((k, _arg_sig(v)) for k, v in kwargs.items())),
+                )
+            else:
+                key = tuple(map(_arg_sig, args))
+        except TypeError:
+            return None
+        entry = self._fast.get(key)
+        if entry is None:
+            return None
+        region = entry.region
+        version = region.version  # read BEFORE building the callable: if a
+        # concurrent select() lands in between, we store the older version
+        # and the next call rebinds again — never the reverse (a stale
+        # callable pinned under a newer version would stick forever)
+        if entry.version != version:
+            # selection moved (demotion / joint hot apply): rebind, still
+            # without touching the slow path
+            entry.fn = region.candidate(region.selected)
+            entry.version = version
+        return entry
+
+    def _maybe_install_fast(self, state: OpState, args: tuple, kwargs: dict) -> None:
+        """Collapse future dispatches once this shape class is final."""
+        if not self.fast_dispatch:
+            return
+        if not (state.from_cache or state.tuned):
+            return
+        if self.db.tuned_point(state.bp) is None:
+            return  # interim winner (budget-capped sweep): not final yet
+        self.finalize(state, *args, **kwargs)
 
     def resolve(self, *args: Any, **kwargs: Any) -> OpState:
         """The op's state for this call's shape class, tuning if needed."""
@@ -151,6 +317,7 @@ class AutotunedOp:
         return self._resolve(args, kwargs, False)
 
     def _resolve(self, args: tuple, kwargs: dict, tune: bool) -> OpState:
+        self.slow_resolutions += 1
         bp = self.spec.shape_class(*args, **kwargs)
         traffic = None
         if self.spec.traffic_class is not None:

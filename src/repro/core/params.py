@@ -70,9 +70,13 @@ class BasicParams:
         return BasicParams.make(**merged)
 
     def fingerprint(self) -> str:
-        """Stable hash used as the tuning-database key."""
-        blob = json.dumps(self.entries, sort_keys=True, default=str)
-        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+        """Stable hash used as the tuning-database key (computed once)."""
+        fp = getattr(self, "_fp", None)
+        if fp is None:
+            blob = json.dumps(self.entries, sort_keys=True, default=str)
+            fp = hashlib.sha256(blob.encode()).hexdigest()[:16]
+            object.__setattr__(self, "_fp", fp)  # frozen dataclass memo
+        return fp
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         inner = ", ".join(f"{k}={v!r}" for k, v in self.entries)

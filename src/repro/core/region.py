@@ -45,12 +45,28 @@ class ATRegion:
         self.oracle = oracle
         self.selected: Dict[str, Any] = space.default()
         self._compiled: Dict[str, Callable[..., Any]] = {}
+        # bumped on every (re-)selection and invalidation: dispatch fast
+        # paths cache "the selected candidate's callable" against this, so
+        # a RuntimeSelector demotion or a joint-program hot apply refreshes
+        # them lazily with one integer compare per call (docs/program.md)
+        self.version = 0
 
     # -- selection -------------------------------------------------------------
 
     def select(self, point: Mapping[str, Any]) -> None:
         self.space.validate(point)
         self.selected = dict(point)
+        self.version += 1
+
+    def invalidate(self) -> None:
+        """Drop every materialized candidate (the family itself changed).
+
+        For regions whose ``instantiate`` closes over mutable caller state
+        (the Trainer's remat directive): after mutating that state, cached
+        candidates are stale — they were built under the old closure.
+        """
+        self._compiled.clear()
+        self.version += 1
 
     def select_from_db(self, db: TuningDB, bp: BasicParams) -> bool:
         """Adopt the tuned argmin for this BP if the DB has one."""

@@ -35,6 +35,11 @@ def main() -> None:
         "--inline-tune", action="store_true",
         help="tune unseen traffic classes on the hot path (baseline)",
     )
+    tune_mode.add_argument(
+        "--joint-tune", action="store_true",
+        help="joint AT of (prefill x decode) degrees on the measured "
+             "full serve step before serving (docs/program.md)",
+    )
     ap.add_argument("--tuning-db", default=None, help="persistent TuningDB path")
     args = ap.parse_args()
 
@@ -64,6 +69,12 @@ def main() -> None:
         background_tuner=tuner,
         inline_tune=args.inline_tune,
     )
+    if args.joint_tune:
+        r = server.joint_tune(requests)
+        src = "recalled by fingerprint" if r.from_cache else (
+            f"{r.evaluations} measured step evaluations"
+        )
+        print(f"joint serve winner: {r.assignment} ({src})")
     out = server.run(requests)
     print(f"served {len(out)} requests, {server.stats.tokens_out} tokens, "
           f"{server.stats.decode_tok_per_s:.1f} tok/s")

@@ -7,6 +7,12 @@ On this host the full configs are CPU-prohibitive; --smoke (default) uses
 the reduced config.  On a real TPU slice the same entry point shards
 params/opt-state with the tuned sharding rule (see launch/dryrun.py for the
 rule selection machinery).
+
+``--joint-tune`` runs whole-program joint AT (docs/program.md) before the
+loop: the (microbatch degree × remat directive) composition is searched
+against the *measured full train step*, the winner persists in the tuning
+DB under the program fingerprint (``--tuning-db`` makes it survive runs),
+and hot-applies through ``region.select``.
 """
 import argparse
 
@@ -20,9 +26,25 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument(
+        "--joint-tune", action="store_true",
+        help="joint AT of (microbatch degree x remat) on the measured step",
+    )
+    ap.add_argument(
+        "--joint-cap", type=int, default=16,
+        help="joint-candidate budget: products under the cap measure "
+             "exhaustively, larger ones switch to coordinate descent "
+             "(hard-stopped at 2x the cap, plus finals re-measurements)",
+    )
+    ap.add_argument(
+        "--joint-k", type=int, default=None,
+        help="per-member survivor count (default: the whole member space)",
+    )
+    ap.add_argument("--tuning-db", default=None, help="persistent TuningDB path")
     args = ap.parse_args()
 
     from repro.configs import get_config
+    from repro.core import TuningDB
     from repro.data import SyntheticLMDataset
     from repro.optim import AdamWConfig
     from repro.runtime import Trainer, TrainLoopConfig
@@ -34,11 +56,20 @@ def main() -> None:
         TrainLoopConfig(
             total_steps=args.steps, ckpt_dir=args.ckpt_dir,
             n_microbatches=args.microbatches,
+            joint_tune=args.joint_tune, joint_cap=args.joint_cap,
+            joint_k=args.joint_k,
         ),
+        tuning_db=TuningDB(args.tuning_db) if args.tuning_db else None,
     )
     ds = SyntheticLMDataset(cfg, global_batch=args.batch, seq_len=args.seq)
     hist = trainer.run(ds)
     print(f"final loss: {hist['loss'][-1]:.4f} after {len(hist['loss'])} steps")
+    if trainer.joint_result is not None:
+        r = trainer.joint_result
+        src = "recalled by fingerprint" if r.from_cache else (
+            f"{r.evaluations} measured step evaluations"
+        )
+        print(f"joint winner: {r.assignment} ({src})")
 
 
 if __name__ == "__main__":

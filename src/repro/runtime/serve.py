@@ -40,6 +40,9 @@ from repro.core import (
     KernelSpec,
     ParamSpace,
     PerfParam,
+    ProgramMember,
+    ProgramResult,
+    ProgramSpec,
     TrafficClass,
     TuningDB,
     register_kernel,
@@ -131,6 +134,7 @@ class Server:
         self.decode_op = self._make_decode_op()
         self.stats = ServeStats()
         self._hot_tuned: set = set()  # fingerprints tuned inline on a serve call
+        self.joint_result: Optional[ProgramResult] = None
 
     # -- degree candidate family -----------------------------------------------
 
@@ -307,6 +311,90 @@ class Server:
                     labels.add(st.traffic.label)
         return sorted(labels)
 
+    # -- whole-program joint AT (docs/program.md) ------------------------------
+
+    def _decode_batch(self, tok, cache) -> Dict[str, Any]:
+        """One decode-step input batch for the just-sampled tokens."""
+        d: Dict[str, Any] = {"tokens": tok[:, None]}
+        if self.cfg.family == "vlm":
+            p = cache["len"]
+            pos = jnp.broadcast_to(p, (tok.shape[0], 1)).astype(jnp.int32)
+            d["positions"] = jnp.broadcast_to(pos, (3, tok.shape[0], 1))
+        return d
+
+    def serve_program(
+        self, requests: Sequence[ServingRequest], decode_steps: int = 4
+    ) -> ProgramSpec:
+        """The serve step as a joint problem: prefill degree × decode degree.
+
+        The two phases share the KV-cache layout and the host's memory
+        headroom, so their best chunking degrees are coupled — the joint
+        cost is one *full* serve step (prefill + ``decode_steps`` decodes)
+        measured end to end, and the winner hot-applies through each
+        region's ``select`` plus the DegreeController mirror.
+        """
+        group = list(requests[: self.batch_size])
+        if not group:
+            raise ValueError("serve_program needs at least one request")
+        while len(group) < self.batch_size:
+            group.append(group[-1])
+        plen = max(len(r.prompt) for r in group)
+        batch = self._batch_inputs(group, plen)
+        params = self.params
+        pstate = self.prefill_op.resolve_deferred(params, batch)
+        logits, cache = pstate.region(params, batch)
+        tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        dstate = self.decode_op.resolve_deferred(
+            params, self._decode_batch(tok0, cache), cache
+        )
+        members = [
+            ProgramMember("prefill", pstate.region, bp=pstate.bp),
+            ProgramMember("decode", dstate.region, bp=dstate.bp),
+        ]
+
+        def build(assignment):
+            pfn = pstate.region.candidate(assignment["prefill"])
+            dfn = dstate.region.candidate(assignment["decode"])
+
+            def thunk():
+                lg, ca = pfn(params, batch)
+                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                for _ in range(decode_steps):
+                    lg, ca = dfn(params, self._decode_batch(tok, ca), ca)
+                    tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                return lg
+
+            return thunk
+
+        def on_apply(assignment):
+            # winners land in the DegreeController exactly like per-phase
+            # tuning results do, so run()'s set/restore bracket adopts them
+            self._on_tuned(pstate)
+            self._on_tuned(dstate)
+
+        return ProgramSpec(
+            f"serve_step/{self.cfg.name}", members, db=self.db, build=build,
+            on_apply=on_apply,
+            extra={
+                "batch": self.batch_size, "plen": int(plen),
+                "steps": int(decode_steps), "backend": jax.default_backend(),
+                **mesh_bp_entries(self.mesh),
+            },
+        )
+
+    def joint_tune(
+        self,
+        requests: Sequence[ServingRequest],
+        decode_steps: int = 4,
+        cap: Optional[int] = 16,
+        k: Optional[int] = None,
+        force: bool = False,
+    ) -> ProgramResult:
+        """Joint before-execution AT of one full serve step (docs/program.md)."""
+        program = self.serve_program(requests, decode_steps=decode_steps)
+        self.joint_result = program.tune(k=k, cap=cap, force=force)
+        return self.joint_result
+
     # -- batching --------------------------------------------------------------
 
     def _batch_inputs(self, group: Sequence[ServingRequest], plen: int) -> Dict[str, Any]:
@@ -359,15 +447,7 @@ class Server:
             t0 = time.perf_counter()
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-            def dbatch_for(tok) -> Dict[str, Any]:
-                d: Dict[str, Any] = {"tokens": tok[:, None]}
-                if self.cfg.family == "vlm":
-                    p = cache["len"]
-                    pos = jnp.broadcast_to(p, (len(group), 1)).astype(jnp.int32)
-                    d["positions"] = jnp.broadcast_to(pos, (3, len(group), 1))
-                return d
-
-            dbatch = dbatch_for(next_tok)
+            dbatch = self._decode_batch(next_tok, cache)
             dstate = self._resolve(self.decode_op, self.params, dbatch, cache)
             dlabel = dstate.traffic.label if dstate.traffic else "decode"
             step_times: List[float] = []
@@ -382,7 +462,7 @@ class Server:
                     logits.block_until_ready()
                     step_times.append(time.perf_counter() - ts)
                     next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                    dbatch = dbatch_for(next_tok)
+                    dbatch = self._decode_batch(next_tok, cache)
             jax.block_until_ready(next_tok)
             self.stats.decode_s += time.perf_counter() - t0
             self.stats.tokens_out += n_steps * len(group)

@@ -37,6 +37,9 @@ from repro.core import (
     KernelSpec,
     ParamSpace,
     PerfParam,
+    ProgramMember,
+    ProgramResult,
+    ProgramSpec,
     TuningDB,
     register_kernel,
 )
@@ -61,6 +64,16 @@ class TrainLoopConfig:
     microbatch_candidates: Sequence[int] = (1, 2, 4)
     straggler_tolerance: float = 3.0
     seed: int = 0
+    # whole-program joint AT (docs/program.md): tune (microbatch degree ×
+    # remat directive) against the *measured full train step* before the
+    # loop starts, instead of pinning the configured degree.  The two knobs
+    # are the paper's pair — remat is the directive change, the microbatch
+    # degree the thread-count analogue — and they interact (both trade
+    # activation memory against time), which is why they are tuned jointly.
+    joint_tune: bool = False
+    joint_cap: Optional[int] = 16
+    joint_k: Optional[int] = None
+    remat_candidates: Sequence[str] = ("none", "full")
 
 
 def make_train_step(
@@ -142,8 +155,13 @@ class Trainer:
         # The train step is a registry op like any kernel: the microbatch
         # degree is its PP (run-time layer), and its shape class is fixed by
         # (arch, candidate degrees).  The configured degree is pinned rather
-        # than wall-clock-tuned so restarted runs stay bit-deterministic.
+        # than wall-clock-tuned so restarted runs stay bit-deterministic;
+        # joint_tune replaces the pin with a whole-program search whose cost
+        # is the measured full step.  The remat directive lives in a mutable
+        # cell so a joint winner hot-applies without rebuilding the region
+        # (the region is invalidated instead, see _on_joint_apply).
         degrees = tuple(loop_cfg.microbatch_candidates)
+        self._step_remat = cfg.remat
         bp = BasicParams.make(arch=cfg.name, kind="train_runtime", micro=degrees)
         spec = register_kernel(
             KernelSpec(
@@ -152,7 +170,10 @@ class Trainer:
                     name="train_step",
                     space=ParamSpace([PerfParam("n_micro", degrees)]),
                     instantiate=lambda pt: jax.jit(
-                        make_train_step(cfg, opt_cfg, pt["n_micro"])
+                        make_train_step(
+                            cfg.with_(remat=self._step_remat), opt_cfg,
+                            pt["n_micro"],
+                        )
                     ),
                 ),
                 shape_class=lambda *a, **k: bp,
@@ -172,6 +193,102 @@ class Trainer:
         self.bp = bp
         self._state = self.op.select({"n_micro": loop_cfg.n_microbatches})
         self.region = self._state.region
+        self.joint_result: Optional[ProgramResult] = None
+
+    # -- whole-program joint AT (docs/program.md) --------------------------------
+
+    def train_program(self, params, opt_state, batch) -> ProgramSpec:
+        """The train step as a joint tuning problem: micro × remat.
+
+        ``micro`` is the live train region (so the joint winner hot-applies
+        straight through ``region.select``); ``remat`` is the directive
+        member.  The program's cost builds one fresh jitted step per joint
+        assignment and measures it end to end — per-knob greedy tuning
+        cannot see that both knobs compete for the same activation memory.
+        """
+        cfg, opt_cfg, loop = self.cfg, self.opt_cfg, self.loop
+        remats = tuple(loop.remat_candidates)
+        remat_region = ATRegion(
+            "train_remat",
+            ParamSpace([PerfParam("remat", remats)]),
+            instantiate=lambda pt: jax.jit(
+                make_train_step(
+                    cfg.with_(remat=pt["remat"]), opt_cfg, loop.n_microbatches
+                )
+            ),
+        )
+        if cfg.remat in remats:
+            remat_region.select({"remat": cfg.remat})  # untuned baseline
+        members = [
+            ProgramMember("micro", self.region, bp=self.bp),
+            ProgramMember(
+                "remat", remat_region,
+                bp=BasicParams.make(
+                    arch=cfg.name, kind="train_remat", remat=remats
+                ),
+            ),
+        ]
+
+        def build(assignment):
+            step = jax.jit(
+                make_train_step(
+                    cfg.with_(remat=assignment["remat"]["remat"]),
+                    opt_cfg,
+                    int(assignment["micro"]["n_micro"]),
+                )
+            )
+
+            def thunk():
+                _, _, metrics = step(params, opt_state, batch)
+                return metrics["loss"]
+
+            return thunk
+
+        tokens = batch.get("tokens")
+        extra = {
+            "arch": cfg.name,
+            "backend": jax.default_backend(),
+            "batch": int(tokens.shape[0]) if tokens is not None else 0,
+            "seq": int(tokens.shape[1]) if tokens is not None else 0,
+        }
+        return ProgramSpec(
+            f"train_step/{cfg.name}", members, db=self.db, build=build,
+            on_apply=self._on_joint_apply, extra=extra,
+        )
+
+    def _on_joint_apply(self, assignment) -> None:
+        """Mirror the joint winner's remat directive into the live step.
+
+        The micro member *is* the live region, so its ``select`` already
+        landed; the remat directive lives in the instantiate closure, so
+        adopting it invalidates the region's compiled candidates (they were
+        built under the old directive) — the next step pays one rebuild,
+        every later switch is a dict lookup again.
+        """
+        remat = assignment.get("remat", {}).get("remat")
+        if remat is not None and remat != self._step_remat:
+            self._step_remat = remat
+            self.region.invalidate()
+
+    def joint_tune(self, dataset, key: Optional[jax.Array] = None,
+                   force: bool = False,
+                   state: Optional[Tuple[Any, Any]] = None) -> ProgramResult:
+        """Joint before-execution AT of the whole train step.
+
+        A final winner recorded under the program fingerprint short-circuits
+        to a hot apply (zero evaluations, the cross-run cache); otherwise
+        the :class:`~repro.core.program.JointSearch` measures full steps.
+        ``state`` reuses an already-initialized ``(params, opt_state)`` pair
+        (``run()`` passes its own) instead of materializing a second copy.
+        """
+        key = key if key is not None else jax.random.PRNGKey(self.loop.seed)
+        batch = {k: jnp.asarray(v) for k, v in dataset.batch(0).items()}
+        params, opt_state = state if state is not None else self.init_state(key)
+        program = self.train_program(params, opt_state, batch)
+        self.joint_result = program.tune(
+            k=self.loop.joint_k, cap=self.loop.joint_cap, force=force
+        )
+        return self.joint_result
 
     # -- state ------------------------------------------------------------------
 
@@ -191,6 +308,8 @@ class Trainer:
     ) -> Dict[str, List[float]]:
         key = key if key is not None else jax.random.PRNGKey(self.loop.seed)
         params, opt_state = self.init_state(key)
+        if self.loop.joint_tune and self.joint_result is None:
+            self.joint_tune(dataset, key, state=(params, opt_state))
         start = 0
         if self.ckpt is not None:
             restored = self.ckpt.restore_latest({"p": params, "o": opt_state})

@@ -1,0 +1,320 @@
+"""Zero-overhead dispatch fast path (docs/program.md).
+
+Acceptance properties:
+
+* two threads racing an untuned op resolve ONE canonical state (one tune,
+  one state object) — the fast path must not reintroduce the duplicate-state
+  race the per-fingerprint build locks close;
+* once a shape class is final, dispatch never re-enters the slow path (no
+  shape-class extraction, no fingerprint, no lock) — counted via
+  ``slow_resolutions``;
+* a selection change (RuntimeSelector demotion, joint hot apply) rebinds the
+  fast route in place instead of falling back to the slow path;
+* value-dependent class extraction (traffic-class specs) and unkeyable
+  arguments stay on the slow path — the fast key is structural only.
+"""
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ATRegion,
+    AutotunedOp,
+    BasicParams,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    TuningDB,
+)
+from repro.core.autotuned import _arg_sig, _fast_key
+from repro.core.traffic import TrafficClass
+
+
+def _toy_spec(costs, calls, name="fast_toy", tune_delay=0.0):
+    space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            if tune_delay:
+                import time
+
+                time.sleep(tune_delay)  # widen the race window
+            calls.append(point["i"])
+            return float(costs[point["i"]])
+
+        return cost
+
+    return KernelSpec(
+        name,
+        make_region=lambda bp: ATRegion(
+            name, space, lambda p: (lambda x: x * p["i"])
+        ),
+        shape_class=lambda x: BasicParams.make(kernel=name, n=int(x.shape[0])),
+        cost_factory=cost_factory,
+    )
+
+
+X = jnp.ones(4)
+
+
+# ---------------------------------------------------------------------------
+# concurrency: one canonical state under racing resolvers
+# ---------------------------------------------------------------------------
+
+
+def test_two_threads_racing_untuned_op_resolve_one_canonical_state():
+    calls = []
+    # both threads release together at the starting line; the slow cost
+    # widens the window so the loser really does race into _resolve while
+    # the winner is still tuning
+    barrier = threading.Barrier(2)
+    op = AutotunedOp(_toy_spec([3.0, 1.0, 2.0], calls, tune_delay=0.05),
+                     db=TuningDB())
+    states, errors = [], []
+
+    def worker():
+        try:
+            barrier.wait(timeout=5)
+            op(X)
+            states.append(op.resolve(X))
+        except Exception as e:  # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert len(op.states()) == 1          # one canonical state
+    assert len(calls) == 3                # tuned exactly once (3 candidates)
+    assert states[0] is states[1]         # both threads share it
+    assert states[0].region.selected == {"i": 1}
+
+
+def test_racing_callers_after_finalization_all_hit_fast_path():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB())
+    op(X)  # tune + finalize
+    op(X)  # install/refresh the fast route
+    before = op.slow_resolutions
+
+    def worker():
+        for _ in range(50):
+            op(X)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert op.slow_resolutions == before
+    assert len(calls) == 2  # no re-tune ever
+
+
+# ---------------------------------------------------------------------------
+# finalized classes never re-enter the slow path
+# ---------------------------------------------------------------------------
+
+
+def test_finalized_class_never_reenters_slow_path():
+    calls = []
+    op = AutotunedOp(_toy_spec([3.0, 1.0, 2.0], calls), db=TuningDB())
+    op(X)                       # tune (slow), installs the fast route
+    base = op.slow_resolutions
+    for _ in range(200):
+        op(X)
+    assert op.slow_resolutions == base
+    assert len(op._fast) == 1
+
+
+def test_db_hit_installs_fast_route_in_fresh_process(tmp_path):
+    path = str(tmp_path / "db.json")
+    calls = []
+    spec = _toy_spec([5.0, 4.0, 1.0], calls)
+    AutotunedOp(spec, db=TuningDB(path))(X)
+    op2 = AutotunedOp(spec, db=TuningDB(path))  # "fresh process"
+    op2(X)                      # from_cache resolution finalizes immediately
+    base = op2.slow_resolutions
+    op2(X)
+    assert op2.slow_resolutions == base
+    assert len(calls) == 3      # the second op never evaluated anything
+
+
+def test_untuned_op_stays_on_slow_path():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB(), tune=False)
+    op(X)
+    op(X)
+    assert not op._fast          # nothing final: no fast route
+    assert op.slow_resolutions >= 2
+
+
+def test_interim_budget_capped_winner_does_not_finalize(tmp_path):
+    calls = []
+    op = AutotunedOp(
+        _toy_spec([3.0, 1.0, 2.0], calls), db=TuningDB(), trial_budget=2
+    )
+    op(X)
+    # budget hit mid-search: the DB best is not final, so dispatch must keep
+    # resolving (the next run should resume the sweep, not freeze the interim)
+    assert not op._fast
+
+
+def test_distinct_shapes_get_distinct_fast_routes():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB())
+    a, b = jnp.ones(4), jnp.ones(8)
+    op(a), op(a)
+    op(b), op(b)
+    assert len(op._fast) == 2
+    base = op.slow_resolutions
+    op(a), op(b)
+    assert op.slow_resolutions == base
+
+
+# ---------------------------------------------------------------------------
+# selection changes rebind in place
+# ---------------------------------------------------------------------------
+
+
+def test_select_after_finalization_rebinds_without_slow_path():
+    calls = []
+    op = AutotunedOp(_toy_spec([3.0, 1.0, 2.0], calls), db=TuningDB())
+    op(X)
+    state = op.resolve(X)
+    base = op.slow_resolutions
+    state.region.select({"i": 2})  # demotion / joint hot apply
+    out = op(X)
+    assert float(out[0]) == 2.0    # the new selection is live
+    assert op.slow_resolutions == base
+    state.region.select({"i": 0})
+    assert float(op(X)[0]) == 0.0
+    assert op.slow_resolutions == base
+
+
+def test_region_invalidate_rebuilds_candidates_lazily():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB())
+    op(X)
+    state = op.resolve(X)
+    state.region.invalidate()
+    assert state.region.compiled_points() == 0
+    assert float(op(X)[0]) == 1.0  # rebuilt from instantiate, same selection
+
+
+# ---------------------------------------------------------------------------
+# monitoring keeps a trickle of run-time observations
+# ---------------------------------------------------------------------------
+
+
+def test_fast_path_still_feeds_selector_periodically():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB(),
+                     monitor_every=10)
+    op(X)
+    state = op.resolve(X)
+    before = len(state.selector._recent) + len(op.db.history(state.bp))
+    for _ in range(25):
+        op(X)
+    after = len(op.db.history(state.bp))
+    assert after >= 2  # ~every 10th call observed, not zero and not 25
+    assert after <= 4 + before
+
+
+# ---------------------------------------------------------------------------
+# structural keys: what can and cannot collapse
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_class_specs_never_fast_dispatch():
+    spec = KernelSpec(
+        "traffic_toy",
+        make_region=lambda bp: ATRegion(
+            "traffic_toy", ParamSpace([PerfParam("i", (0, 1))]),
+            lambda p: (lambda x: x),
+        ),
+        shape_class=lambda x: BasicParams.make(kernel="traffic_toy"),
+        traffic_class=lambda x: TrafficClass.of("prefill", 1, int(x.shape[0])),
+        cost_factory=lambda r, b, a, k: (lambda p: float(p["i"])),
+    )
+    op = AutotunedOp(spec, db=TuningDB())
+    assert op.fast_dispatch is False
+    op(X)
+    op(X)
+    assert not op._fast
+
+
+def test_fast_key_structural_coverage():
+    a = jnp.ones((2, 3), jnp.float32)
+    b = jnp.ones((2, 3), jnp.bfloat16)
+    assert _fast_key((a,), {}) != _fast_key((b,), {})          # dtype matters
+    assert _fast_key((a,), {}) != _fast_key((a.T,), {})        # shape matters
+    assert _fast_key((a,), {}) == _fast_key((jnp.zeros((2, 3)),), {})
+    assert _fast_key((a,), {"causal": True}) != _fast_key((a,), {"causal": False})
+    assert _fast_key(({"x": a, "n": 3},), {}) == _fast_key(({"n": 3, "x": b.astype(jnp.float32)},), {})
+    assert _fast_key((object(),), {}) is None                  # unkeyable
+
+
+def test_unkeyable_args_fall_back_to_slow_path():
+    calls = []
+    space = ParamSpace([PerfParam("i", (0, 1))])
+    spec = KernelSpec(
+        "unkeyable_toy",
+        make_region=lambda bp: ATRegion(
+            "unkeyable_toy", space, lambda p: (lambda x, fn: x)
+        ),
+        shape_class=lambda x, fn: BasicParams.make(kernel="unkeyable_toy"),
+        cost_factory=lambda r, b, a, k: (lambda p: float(p["i"]) + 1),
+    )
+    op = AutotunedOp(spec, db=TuningDB())
+    op(X, lambda: None)          # a callable arg cannot be keyed
+    base = op.slow_resolutions
+    op(X, lambda: None)
+    assert not op._fast
+    assert op.slow_resolutions == base + 1
+
+
+def test_arg_sig_scalar_and_container_forms():
+    assert _arg_sig(3) == 3 and _arg_sig("x") == "x" and _arg_sig(None) is None
+    assert _arg_sig([1, 2]) == (1, 2)
+    with pytest.raises(TypeError):
+        _arg_sig(object())
+
+
+def test_fast_table_is_bounded(monkeypatch):
+    """Varying scalar args must not leak one route per value forever."""
+    import importlib
+
+    # repro.core re-exports the autotuned() *function* under the same name,
+    # so attribute-style module access resolves to it; go via the module map
+    at = importlib.import_module("repro.core.autotuned")
+    monkeypatch.setattr(at, "FAST_TABLE_LIMIT", 4)
+    calls = []
+    space = ParamSpace([PerfParam("i", (0, 1))])
+    spec = KernelSpec(
+        "bounded_toy",
+        make_region=lambda bp: ATRegion(
+            "bounded_toy", space, lambda p: (lambda x, n: x)
+        ),
+        shape_class=lambda x, n: BasicParams.make(kernel="bounded_toy"),
+        cost_factory=lambda r, b, a, k: (lambda p: float(p["i"]) + 1),
+    )
+    op = AutotunedOp(spec, db=TuningDB())
+    for n in range(20):  # 20 distinct scalar values -> 20 distinct keys
+        op(X, n)
+    assert len(op._fast) <= 4
+    # overflow keys still dispatch correctly via the slow path
+    assert float(op(X, 99)[0]) == 1.0
+
+
+def test_dispatch_returns_executable_candidate():
+    calls = []
+    op = AutotunedOp(_toy_spec([2.0, 1.0], calls), db=TuningDB())
+    op(X)
+    fn = op.dispatch(X)
+    base = op.slow_resolutions
+    assert float(fn(X)[0]) == 1.0
+    assert op.dispatch(X) is fn  # stable binding while selection holds
+    assert op.slow_resolutions == base

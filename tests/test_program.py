@@ -1,0 +1,509 @@
+"""Whole-program joint autotuning tests (docs/program.md).
+
+Covers: flatten/unflatten round trips, the program fingerprint (member BPs,
+PP-space signatures, extra entries), JointSearch's two pinned properties —
+with per-member k = |space| and no cap it reduces to the exhaustive joint
+argmin, and the joint winner is never worse than the per-kernel-greedy
+composition on the same measured cost — the capped/coordinate-descent path,
+persistence (a second tune of the same composition performs zero
+evaluations and hot-applies the recalled winner through ``region.select``),
+per-member survivor staging, and the Trainer/Server integrations.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property sections skip, unit tests still run
+    given = None
+
+from repro.core import (
+    ATRegion,
+    BasicParams,
+    JointSearch,
+    ParamSpace,
+    PerfParam,
+    ProgramMember,
+    ProgramSpec,
+    Tuner,
+    TuningDB,
+    flatten_assignment,
+    pp_key,
+    unflatten_point,
+)
+
+
+def _member(name, domain, prescreen=None, db_bp=True):
+    region = ATRegion(
+        name, ParamSpace([PerfParam("v", tuple(domain))]), lambda p: (lambda: p)
+    )
+    bp = BasicParams.make(kernel=f"member_{name}") if db_bp else None
+    return ProgramMember(name, region, bp=bp, prescreen=prescreen)
+
+
+def _table_cost(table):
+    def cost(point, budget=None):
+        return table[(point["a.v"], point["b.v"])]
+
+    return cost
+
+
+def _program(domains=((0, 1, 2), (0, 1, 2)), db=None, **kw):
+    return ProgramSpec(
+        "prog",
+        [_member("a", domains[0]), _member("b", domains[1])],
+        db=db or TuningDB(),
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# plumbing: flatten/unflatten, fingerprint, joint space
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unflatten_roundtrip():
+    a = {"m1": {"x": 1, "y": "s"}, "m2": {"z": (2, 3)}}
+    assert unflatten_point(flatten_assignment(a)) == a
+
+
+def test_member_name_rejects_separator():
+    region = ATRegion("r", ParamSpace([PerfParam("v", (1,))]), lambda p: p)
+    with pytest.raises(ValueError):
+        ProgramMember("bad.name", region)
+
+
+def test_fingerprint_sensitive_to_members_domains_and_extra():
+    fp = _program().fingerprint().fingerprint()
+    assert _program(domains=((0, 1), (0, 1, 2))).fingerprint().fingerprint() != fp
+    assert _program(extra={"batch": 8}).fingerprint().fingerprint() != fp
+    assert _program().fingerprint().fingerprint() == fp  # deterministic
+
+
+def test_joint_space_is_member_product_with_feasibility():
+    constrained = ParamSpace(
+        [PerfParam("v", (0, 1, 2))], constraint=lambda p: p["v"] != 1
+    )
+    region = ATRegion("a", constrained, lambda p: p)
+    prog = ProgramSpec(
+        "p", [ProgramMember("a", region), _member("b", (0, 1))], db=TuningDB()
+    )
+    pts = list(prog.joint_space().points())
+    assert len(pts) == 4  # (3 - 1 infeasible) x 2
+    assert all(p["a.v"] != 1 for p in pts)
+
+
+# ---------------------------------------------------------------------------
+# JointSearch properties
+# ---------------------------------------------------------------------------
+
+
+def _joint_argmin(table):
+    return min(table, key=table.get)
+
+
+if given is not None:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        costs=st.lists(
+            st.floats(min_value=0.01, max_value=100, allow_nan=False),
+            min_size=9, max_size=9, unique=True,
+        )
+    )
+    def test_property_full_k_no_cap_is_exhaustive_joint_argmin(costs):
+        """Satellite property: k=|space|, cap=None == exhaustive argmin."""
+        table = {
+            (x, y): c
+            for (x, y), c in zip(itertools.product(range(3), range(3)), costs)
+        }
+        prog = _program(db=TuningDB())
+        result = prog.tune(cost=_table_cost(table), k=None, cap=None)
+        best = _joint_argmin(table)
+        assert (result.point["a.v"], result.point["b.v"]) == best
+        assert result.cost == table[best]
+        assert result.evaluations == 9  # every joint candidate measured once
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        costs=st.lists(
+            st.floats(min_value=0.01, max_value=100, allow_nan=False),
+            min_size=16, max_size=16, unique=True,
+        ),
+        cap=st.integers(min_value=2, max_value=8),
+        k=st.integers(min_value=1, max_value=4),
+    )
+    def test_property_joint_never_worse_than_greedy(costs, cap, k):
+        """Satellite property: joint winner <= greedy composition, always —
+        under every pruning regime (any k, any cap), because the greedy
+        composition is always evaluated as the search's starting incumbent.
+        """
+        table = {
+            (x, y): c
+            for (x, y), c in zip(itertools.product(range(4), range(4)), costs)
+        }
+        db = TuningDB()
+        prog = _program(domains=((0, 1, 2, 3), (0, 1, 2, 3)), db=db)
+        # greedy: tune each member alone with the other at its default (0)
+        Tuner(db).tune(prog.members[0].region, prog.members[0].bp,
+                       lambda p: table[(p["v"], 0)], select=False)
+        Tuner(db).tune(prog.members[1].region, prog.members[1].bp,
+                       lambda p: table[(0, p["v"])], select=False)
+        greedy = prog.greedy_composition()
+        greedy_cost = table[(greedy["a"]["v"], greedy["b"]["v"])]
+        result = prog.tune(cost=_table_cost(table), k=k, cap=cap)
+        assert result.cost <= greedy_cost
+        # and the winner is a real table entry, not an invented point
+        assert result.cost == table[(result.point["a.v"], result.point["b.v"])]
+
+
+def test_joint_beats_greedy_on_interaction_cost():
+    """The motivating case: separable-greedy provably misses the optimum."""
+    table = {(0, 0): 1.0, (0, 1): 1.2, (1, 0): 1.2, (1, 1): 0.7}
+    db = TuningDB()
+    prog = _program(domains=((0, 1), (0, 1)), db=db)
+    Tuner(db).tune(prog.members[0].region, prog.members[0].bp,
+                   lambda p: table[(p["v"], 0)], select=False)
+    Tuner(db).tune(prog.members[1].region, prog.members[1].bp,
+                   lambda p: table[(0, p["v"])], select=False)
+    greedy = prog.greedy_composition()
+    assert (greedy["a"]["v"], greedy["b"]["v"]) == (0, 0)
+    result = prog.tune(cost=_table_cost(table), cap=None)
+    assert (result.point["a.v"], result.point["b.v"]) == (1, 1)
+    assert result.cost < table[(0, 0)]
+
+
+def test_capped_search_stays_within_budget_and_descends():
+    domains = (tuple(range(6)), tuple(range(6)))
+    table = {
+        (x, y): 1.0 + abs(x - 4) + abs(y - 3) + (0.5 if (x + y) % 2 else 0.0)
+        for x in domains[0] for y in domains[1]
+    }
+    prog = _program(domains=domains, db=TuningDB())
+    result = prog.tune(cost=_table_cost(table), cap=10)
+    assert result.evaluations <= 20  # hard stop: 2x cap
+    # coordinate descent over a separable-ish cost reaches near the optimum
+    assert result.cost <= table[(0, 0)]
+
+
+def test_joint_search_skips_infeasible_candidates():
+    space = ParamSpace(
+        [PerfParam("a.v", (0, 1)), PerfParam("b.v", (0, 1))],
+        constraint=lambda p: not (p["a.v"] == 1 and p["b.v"] == 1),
+    )
+    search = JointSearch(
+        groups=[("a", [{"a.v": 0}, {"a.v": 1}]), ("b", [{"b.v": 0}, {"b.v": 1}])],
+        cap=None,
+    )
+    table = {(0, 0): 3.0, (0, 1): 2.0, (1, 0): 1.5, (1, 1): 0.1}
+    result = search.run(space, lambda p: table[(p["a.v"], p["b.v"])])
+    assert (result.best.point["a.v"], result.best.point["b.v"]) == (1, 0)
+    assert result.evaluations == 3  # the infeasible (1,1) was never costed
+
+
+def test_finals_also_run_in_exhaustive_branch():
+    """The recorded winner rests on finals-budget measurements even when the
+    whole product was measured (one lucky min_repeats=1 timing must not be
+    recalled forever)."""
+    calls = []
+
+    def cost(point, budget=None):
+        calls.append(budget)
+        return float(point["a.v"] + point["b.v"])
+
+    cost.supports_budget = True
+    prog = _program(domains=((0, 1), (0, 1)), db=TuningDB())
+    prog.tune(cost=cost, cap=None, final_k=2, finals_budget=3)
+    assert calls.count(3) == 2  # both leaders re-measured at the finals budget
+
+
+def test_finals_winner_is_always_refined():
+    """Refinement can raise the leaders past an unrefined candidate; the
+    loop must then refine that candidate too rather than crown a winner
+    whose cost rests on one untrusted timing."""
+    base = {0: 1.00, 1: 1.05, 2: 1.10, 3: 1.20, 4: 1.30}
+    refined = {0: 1.25, 1: 1.28, 2: 1.30, 3: 1.50, 4: 1.60}
+    budget_calls = []
+
+    def cost(point, budget=None):
+        v = point["a.v"]
+        if budget is not None and budget > 1:
+            budget_calls.append(v)
+            return refined[v]
+        return base[v]
+
+    cost.supports_budget = True
+    prog = ProgramSpec("p", [_member("a", (0, 1, 2, 3, 4))], db=TuningDB())
+    result = prog.tune(cost=cost, cap=None, final_k=3, finals_budget=2)
+    # leaders 0,1,2 refined upward past unrefined 3 (1.20): 3 must then be
+    # refined as well, after which refined 0 (1.25) wins
+    assert 3 in budget_calls
+    assert result.point == {"a.v": 0}
+    assert result.cost == 1.25
+
+
+def test_force_retune_remeasures_recorded_trials():
+    """force=True must produce fresh measurements, not recycle the trial
+    cache (the machine may have changed since the recorded sweep)."""
+    measured = []
+
+    def cost(point, budget=None):
+        measured.append((point["a.v"], point["b.v"], budget))
+        return float(point["a.v"] + point["b.v"]) + 0.1
+
+    cost.supports_budget = True
+    db = TuningDB()
+    prog = _program(domains=((0, 1), (0, 1)), db=db)
+    prog.tune(cost=cost, cap=None)
+    n = len(measured)
+    assert n >= 4
+    prog.tune(cost=cost, cap=None, force=True)
+    fresh = measured[n:]
+    assert len(fresh) >= 4                      # everything re-measured
+    assert all(b is not None for b in fresh)    # via the cache-bypass path
+
+
+def test_head_is_lazy_rank_sum_prefix():
+    """_head yields the same rank-sum prefix as the full sorted product,
+    without materializing the product — a huge survivor cross product must
+    not blow up before the first measurement."""
+    groups = [
+        ("a", [{"a.v": i} for i in range(16)]),
+        ("b", [{"b.v": i} for i in range(16)]),
+        ("c", [{"c.v": i} for i in range(16)]),
+    ]
+    search = JointSearch(groups, cap=8)
+    head = search._head(10)
+    sums = [p["a.v"] + p["b.v"] + p["c.v"] for p in head]
+    assert sums == sorted(sums)      # nondecreasing rank-sum order
+    assert sums[0] == 0 and len(head) == 10
+    assert search.product_size() == 16 ** 3
+
+    # and a capped tune over the 4096-point product stays within budget
+    space = ParamSpace([
+        PerfParam("a.v", tuple(range(16))),
+        PerfParam("b.v", tuple(range(16))),
+        PerfParam("c.v", tuple(range(16))),
+    ])
+    result = search.run(
+        space, lambda p: float(p["a.v"] + p["b.v"] + p["c.v"] + 1)
+    )
+    assert result.evaluations <= 16  # 2x cap hard stop
+    assert result.best.cost == 1.0
+
+
+def test_finals_remeasure_with_budget_aware_cost():
+    calls = []
+
+    def cost(point, budget=None):
+        calls.append((point["a.v"], point["b.v"], budget))
+        return float(point["a.v"] + point["b.v"])
+
+    cost.supports_budget = True
+    domains = (tuple(range(5)), tuple(range(5)))
+    prog = _program(domains=domains, db=TuningDB())
+    prog.tune(cost=cost, cap=8, final_k=2, finals_budget=3)
+    assert [c for c in calls if c[2] == 3]  # finals re-measured at budget 3
+
+
+# ---------------------------------------------------------------------------
+# staging: survivors and prescreens
+# ---------------------------------------------------------------------------
+
+
+def test_survivors_rank_by_prescreen_and_keep_greedy():
+    prescreen = lambda p: {0: 3.0, 1: 1.0, 2: 2.0}[p["v"]]  # noqa: E731
+    m = _member("a", (0, 1, 2), prescreen=prescreen)
+    prog = ProgramSpec("p", [m, _member("b", (0,))], db=TuningDB())
+    groups, prescreen_evals = prog.survivors(k=2)
+    assert prescreen_evals == 3
+    ranked = [p["a.v"] for p in dict(groups)["a"]]
+    # top-2 by prescreen (1 then 2), with the pruned greedy/default point
+    # re-inserted at the front — it is never dropped
+    assert ranked == [0, 1, 2]
+
+
+def test_survivors_prefer_recorded_member_trials_over_prescreen():
+    db = TuningDB()
+    boom = lambda p: 1 / 0  # noqa: E731  (must never be called)
+    m = _member("a", (0, 1, 2), prescreen=boom)
+    prog = ProgramSpec("p", [m, _member("b", (0,))], db=db)
+    Tuner(db).tune(m.region, m.bp, lambda p: {0: 5.0, 1: 0.5, 2: 2.0}[p["v"]],
+                   select=False)
+    groups, prescreen_evals = prog.survivors(k=2)
+    assert prescreen_evals == 0
+    assert [p["a.v"] for p in dict(groups)["a"]][0] == 1
+
+
+def test_member_from_op_resolves_without_tuning():
+    from repro.core import AutotunedOp, KernelSpec
+
+    calls = []
+    space = ParamSpace([PerfParam("i", (0, 1, 2))])
+    spec = KernelSpec(
+        "prog_from_op_toy",
+        make_region=lambda bp: ATRegion(
+            "prog_from_op_toy", space, lambda p: (lambda x: x * p["i"])
+        ),
+        shape_class=lambda x: BasicParams.make(
+            kernel="prog_from_op_toy", n=int(x.shape[0])
+        ),
+        cost_factory=lambda r, b, a, k: (
+            lambda p: calls.append(p["i"]) or float(p["i"]) + 1
+        ),
+        prescreen_factory=lambda r, b, a, k: (lambda p: float(p["i"])),
+    )
+    op = AutotunedOp(spec, db=TuningDB())
+    x = jnp.ones(4)
+    member = ProgramMember.from_op("toy", op, x)
+    assert not calls                       # building a member never tunes
+    assert member.bp["kernel"] == "prog_from_op_toy"
+    assert member.prescreen is not None    # spec prescreen adopted
+    assert member.args == (x,)
+    prog = ProgramSpec("p", [member], db=op.db)
+    result = prog.tune(cost=lambda pt, budget=None: float(pt["toy.i"]) + 1,
+                       cap=None)
+    assert result.point == {"toy.i": 0}
+    assert member.region.selected == {"i": 0}
+
+
+# ---------------------------------------------------------------------------
+# persistence + hot apply
+# ---------------------------------------------------------------------------
+
+
+def test_recalled_winner_zero_evaluations_and_hot_applies(tmp_path):
+    path = str(tmp_path / "db.json")
+    table = {(0, 0): 1.0, (0, 1): 1.2, (1, 0): 1.2, (1, 1): 0.7}
+    evals = []
+
+    def cost(point, budget=None):
+        evals.append(1)
+        return table[(point["a.v"], point["b.v"])]
+
+    prog = _program(domains=((0, 1), (0, 1)), db=TuningDB(path))
+    r1 = prog.tune(cost=cost, cap=None)
+    n = len(evals)
+    # a fresh ProgramSpec over a fresh DB object on the same file == a
+    # fresh process: the winner is recalled by program fingerprint
+    prog2 = _program(domains=((0, 1), (0, 1)), db=TuningDB(path))
+    r2 = prog2.tune(cost=cost, cap=None)
+    assert r2.from_cache and len(evals) == n
+    assert r2.point == r1.point
+    # hot apply went through region.select on every member
+    assert prog2.members[0].region.selected == {"v": 1}
+    assert prog2.members[1].region.selected == {"v": 1}
+
+
+def test_changed_domain_invalidates_recalled_winner(tmp_path):
+    path = str(tmp_path / "db.json")
+    cost = _table_cost({(x, y): float(x + y + 1) for x in range(3) for y in range(3)})
+    _program(domains=((0, 1), (0, 1)), db=TuningDB(path)).tune(cost=cost, cap=None)
+    prog2 = _program(domains=((0, 1, 2), (0, 1)), db=TuningDB(path))
+    r2 = prog2.tune(cost=cost, cap=None)
+    assert not r2.from_cache  # new domain -> new fingerprint -> fresh search
+
+
+def test_apply_invokes_on_apply_with_assignment():
+    seen = []
+    prog = _program(on_apply=lambda a: seen.append(a))
+    prog.apply({"a.v": 2, "b.v": 1})
+    assert seen == [{"a": {"v": 2}, "b": {"v": 1}}]
+    assert prog.members[0].region.selected == {"v": 2}
+    # assignment form works too
+    prog.apply({"a": {"v": 0}, "b": {"v": 0}})
+    assert prog.members[0].region.selected == {"v": 0}
+
+
+def test_tune_resumes_from_recorded_trials(tmp_path):
+    """Interrupted joint sweeps resume: recorded trials are not re-measured."""
+    path = str(tmp_path / "db.json")
+    table = {(x, y): float(10 - x - y) for x in range(2) for y in range(2)}
+    evals = []
+
+    def cost(point, budget=None):
+        evals.append(1)
+        return table[(point["a.v"], point["b.v"])]
+
+    db = TuningDB(path)
+    prog = _program(domains=((0, 1), (0, 1)), db=db)
+    # pre-record two of the four trials under the program fingerprint, as an
+    # interrupted run would have
+    bp = prog.fingerprint()
+    db.record_trial(bp, {"a.v": 0, "b.v": 0}, 10.0, "before_execution")
+    db.record_trial(bp, {"a.v": 0, "b.v": 1}, 9.0, "before_execution")
+    prog.tune(cost=cost, cap=None)
+    assert len(evals) == 2  # only the unrecorded half was measured
+
+
+# ---------------------------------------------------------------------------
+# integrations: Trainer and Server
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_cfg():
+    from repro.configs import get_config
+
+    return get_config("tinyllama-1.1b", smoke=True)
+
+
+def test_trainer_joint_tune_end_to_end(smoke_cfg):
+    from repro.data import SyntheticLMDataset
+    from repro.optim import AdamWConfig
+    from repro.runtime import Trainer, TrainLoopConfig
+
+    db = TuningDB()
+    loop = TrainLoopConfig(
+        total_steps=1, n_microbatches=1, microbatch_candidates=(1, 2),
+        joint_tune=True,
+    )
+    trainer = Trainer(
+        smoke_cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10),
+        loop, tuning_db=db,
+    )
+    ds = SyntheticLMDataset(smoke_cfg, global_batch=4, seq_len=16, seed=7)
+    hist = trainer.run(ds)
+    assert len(hist["loss"]) == 1
+    r = trainer.joint_result
+    assert r is not None and not r.from_cache
+    assert set(r.assignment) == {"micro", "remat"}
+    # the live region adopted the winner through region.select
+    assert trainer.region.selected == {
+        "n_micro": r.assignment["micro"]["n_micro"]
+    }
+    assert trainer._step_remat == r.assignment["remat"]["remat"]
+
+    # a second trainer over the same DB recalls the winner with zero evals
+    trainer2 = Trainer(
+        smoke_cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10),
+        loop, tuning_db=db,
+    )
+    r2 = trainer2.joint_tune(ds)
+    assert r2.from_cache and r2.assignment == r.assignment
+    assert trainer2.region.selected == trainer.region.selected
+
+
+def test_server_joint_tune_end_to_end(smoke_cfg):
+    from repro.data import synthetic_requests
+    from repro.models import init_params, param_specs
+    from repro.runtime import Server
+
+    params = init_params(jax.random.PRNGKey(0), param_specs(smoke_cfg))
+    db = TuningDB()
+    server = Server(smoke_cfg, params, batch_size=4, max_len=32, tuning_db=db)
+    reqs = synthetic_requests(smoke_cfg, 4, 8, 4)
+    r = server.joint_tune(reqs, decode_steps=2)
+    assert set(r.assignment) == {"prefill", "decode"}
+    assert not r.from_cache and r.evaluations >= 1
+    # winners mirrored into the degree controller per traffic label
+    labels = server.traffic_classes_seen
+    assert labels  # prefill + decode classes resolved
+    out = server.run(reqs)
+    assert len(out) == 4
+    # recall on the same composition
+    r2 = server.joint_tune(reqs, decode_steps=2)
+    assert r2.from_cache and r2.assignment == r.assignment
