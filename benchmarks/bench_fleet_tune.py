@@ -1,0 +1,122 @@
+"""Fleet tuning benchmark: 1 vs N workers on the five kernels (docs/fleet.md).
+
+For each registered Pallas kernel this runs the same before-execution sweep
+twice — single worker and ``WORKERS``-worker sharded
+(:class:`~repro.fleet.FleetCoordinator`, thread backend) — using the
+kernel's *deterministic* prescreen cost (the compile-only roofline /
+analytic model of docs/tuning.md), so the two runs score identical numbers
+and the gates cannot flake on machine noise:
+
+* **identical winners** — the sharded fleet must return the single-process
+  argmin for every kernel (the merge-barrier equivalence, gated);
+* **full coverage** — fleet evaluations == |space| in both runs (gated);
+* **balance** — shard sizes differ by at most one point (gated; per-worker
+  work is 1/N of the space, which is what makes throughput scale);
+* **throughput scaling** — back-to-back wall-time ratio of the two runs,
+  emitted per kernel and in aggregate.  XLA lowering/compilation releases
+  the GIL, so the thread fleet overlaps candidate compilation.  The ratio
+  is gated (``min_speedup_full``) only in full mode — CI smoke runs under
+  ``BENCH_FAST=1`` where the checker skips the timing gate (2-core runners
+  make wall-clock ratios a coin toss; the deterministic gates still hold).
+
+Rows: ``fleet_tune/<kernel>/single`` and ``.../fleet`` (wall seconds, with
+``evals=``/``winner=`` derived), plus a ``fleet_tune/summary`` row carrying
+the gate fields ``scripts/check_bench_regression.py`` reads against
+``benchmarks/baselines/fleet_tune.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from .common import emit
+
+WORKERS = 2
+KERNELS = ("exb", "flash_attention", "rglru_scan", "ssm_scan", "stress")
+
+
+def _prescreen_cost(name):
+    """The kernel's deterministic stage-1 cost over its example args."""
+    from repro.core.cost import roofline_prescreen
+    from repro.core.registry import get_kernel
+    from repro.fleet.workloads import example_args
+
+    spec = get_kernel(name)
+    args = example_args(name)
+    bp = spec.shape_class(*args)
+    region = spec.make_region(bp)
+    factory = spec.prescreen_factory or roofline_prescreen
+    cost = factory(region, bp, args, {})
+    if cost is None:  # no example args — cannot happen for these kernels
+        raise RuntimeError(f"{name}: no prescreen cost available")
+    return region, bp, cost
+
+
+def run() -> None:
+    from repro.core import BasicParams
+    from repro.fleet import FleetCoordinator
+
+    winners_match = 0
+    balanced = True
+    covered = True
+    speedups = []
+
+    for name in KERNELS:
+        region, bp, single_cost = _prescreen_cost(name)
+        space = region.space
+        n_points = sum(1 for _ in space.points())  # feasible, not raw grid
+
+        t0 = time.perf_counter()
+        single = FleetCoordinator(workers=1).search(
+            space, single_cost, bp=BasicParams.make(kernel=f"bench_single/{name}")
+        )
+        t_single = time.perf_counter() - t0
+        emit(
+            f"fleet_tune/{name}/single", t_single,
+            f"evals={single.evaluations};"
+            f"winner={json.dumps(single.best.point, sort_keys=True)}",
+        )
+
+        # fresh cost: the fleet run must pay its own compilations, not
+        # replay the single run's cache (the timing comparison is honest)
+        _, _, fleet_cost = _prescreen_cost(name)
+        t0 = time.perf_counter()
+        fleet = FleetCoordinator(workers=WORKERS).search(
+            space, fleet_cost, bp=BasicParams.make(kernel=f"bench_fleet/{name}")
+        )
+        t_fleet = time.perf_counter() - t0
+        sizes = [w.points for w in fleet.workers]
+        emit(
+            f"fleet_tune/{name}/fleet", t_fleet,
+            f"evals={fleet.evaluations};workers={WORKERS};"
+            f"shards={'/'.join(map(str, sizes))};"
+            f"winner={json.dumps(fleet.best.point, sort_keys=True)}",
+        )
+
+        if fleet.best.point == single.best.point:
+            winners_match += 1
+        else:
+            print(f"fleet_tune/{name}: WINNER MISMATCH "
+                  f"single={single.best.point} fleet={fleet.best.point}")
+        if not (single.evaluations == fleet.evaluations == n_points):
+            covered = False
+        if max(sizes) - min(sizes) > 1:
+            balanced = False
+        speedups.append(t_single / t_fleet if t_fleet > 0 else 1.0)
+
+    agg_speedup = sum(speedups) / len(speedups)
+    emit(
+        "fleet_tune/summary", 0.0,
+        f"winners_match={winners_match};kernels={len(KERNELS)};"
+        f"covered={int(covered)};balanced={int(balanced)};"
+        f"workers={WORKERS};speedup={agg_speedup:.2f}",
+    )
+    if winners_match != len(KERNELS):
+        raise AssertionError(
+            f"fleet equivalence violated on {len(KERNELS) - winners_match} "
+            "kernel(s): sharded winner != single-process winner"
+        )
+
+
+if __name__ == "__main__":
+    run()

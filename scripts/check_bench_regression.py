@@ -13,7 +13,16 @@ checks three gates against ``benchmarks/baselines/``:
   ``min_strict_configs`` configs where joint beats greedy strictly;
 * **dispatch.json** — the finalized-dispatch fast path
   (``dispatch/summary``) must report at least ``min_speedup`` (10x) lower
-  per-call overhead than full shape-class resolution.
+  per-call overhead than full shape-class resolution;
+* **serve_traffic.json** — background traffic-class serving
+  (``serve_traffic_background_*`` rows) must report ``hot_evals=0`` in
+  every phase and at least ``min_tuned_classes`` classes tuned off the
+  hot path;
+* **fleet_tune.json** — the sharded fleet search (``fleet_tune/summary``)
+  must report identical winners to single-process on every kernel, full
+  space coverage, and balanced shards; the wall-clock speedup ratio is
+  gated (``min_speedup_full``) only on full (non ``BENCH_FAST``) records,
+  where the timing is meaningful.
 
 Every gated quantity is either a deterministic count/flag or a
 back-to-back ratio of like timings, so none of the gates flake on machine
@@ -134,6 +143,72 @@ def check_dispatch(record: dict, problems: list) -> str:
     return f"dispatch: {speedup:.1f}x over slow resolution"
 
 
+def check_serve_traffic(record: dict, problems: list) -> str:
+    with open(BASELINES / "serve_traffic.json") as f:
+        baseline = json.load(f)
+    tuned = 0
+    for phase in ("background_cold", "background_warm"):
+        fields = _derived_fields(record, f"serve_traffic_{phase}_p50")
+        if fields is None:
+            problems.append(f"serve_traffic: no {phase} row in record")
+            continue
+        if baseline.get("require_hot_evals_zero", True) and fields.get(
+            "hot_evals"
+        ) != "0":
+            problems.append(
+                f"serve_traffic: {phase} paid hot-path cost evaluations "
+                f"(hot_evals={fields.get('hot_evals')})"
+            )
+        if phase == "background_warm":
+            tuned = int(fields.get("tuned_classes", 0))
+            floor = int(baseline.get("min_tuned_classes", 1))
+            if tuned < floor:
+                problems.append(
+                    f"serve_traffic: only {tuned} traffic class(es) tuned "
+                    f"off the hot path (need >= {floor})"
+                )
+            if int(fields.get("bg_evals", 0)) < int(
+                baseline.get("min_bg_evals", 1)
+            ):
+                problems.append(
+                    "serve_traffic: background tuner reported "
+                    f"{fields.get('bg_evals')} evaluations"
+                )
+    return f"serve_traffic: {tuned} classes tuned, hot path clean"
+
+
+def check_fleet_tune(record: dict, problems: list) -> str:
+    with open(BASELINES / "fleet_tune.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "fleet_tune/summary")
+    if fields is None:
+        problems.append("fleet_tune: no fleet_tune/summary row in record")
+        return "fleet_tune: missing"
+    kernels = int(fields.get("kernels", 0))
+    match = int(fields.get("winners_match", 0))
+    if baseline.get("require_winners_match", True) and match != kernels:
+        problems.append(
+            f"fleet_tune: sharded winner != single-process winner on "
+            f"{kernels - match}/{kernels} kernel(s)"
+        )
+    if baseline.get("require_covered", True) and fields.get("covered") != "1":
+        problems.append("fleet_tune: fleet evaluations != |space| "
+                        "(shards lost or duplicated candidates)")
+    if baseline.get("require_balanced", True) and fields.get("balanced") != "1":
+        problems.append("fleet_tune: shard sizes differ by more than one")
+    speedup = float(fields.get("speedup", 0.0))
+    if not record.get("fast"):
+        floor = float(baseline.get("min_speedup_full", 1.0))
+        if speedup < floor:
+            problems.append(
+                f"fleet_tune: {int(fields.get('workers', 0))}-worker search "
+                f"throughput scaled only {speedup:.2f}x "
+                f"(full-mode gate >= {floor:.2f}x)"
+            )
+    return (f"fleet_tune: winners {match}/{kernels}, "
+            f"{speedup:.2f}x with {fields.get('workers')} workers")
+
+
 def main() -> int:
     bench_path = Path(
         sys.argv[1] if len(sys.argv) > 1
@@ -152,6 +227,8 @@ def main() -> int:
         check_tune_throughput(record, problems, improved),
         check_train_step(record, problems),
         check_dispatch(record, problems),
+        check_serve_traffic(record, problems),
+        check_fleet_tune(record, problems),
     ]
 
     for p in problems:

@@ -21,6 +21,10 @@ Public API:
 * :class:`~repro.core.program.ProgramSpec` /
   :class:`~repro.core.program.JointSearch` — whole-program joint autotuning
   over composed regions, measured end to end (docs/program.md).
+
+The fleet control plane — device fingerprints, sharded N-worker search,
+drift-aware canary re-tuning — lives in :mod:`repro.fleet` (docs/fleet.md)
+and layers on this package without adding anything to its import cost.
 """
 from .cost import (
     FX100,

@@ -156,6 +156,8 @@ class AutotunedOp:
         warm_start: bool = True,
         fast_dispatch: bool = True,
         monitor_every: int = 64,
+        device_key: Optional[bool] = None,
+        drift: Optional[Any] = None,
     ) -> None:
         self.spec = spec
         self._registry = registry
@@ -183,6 +185,23 @@ class AutotunedOp:
         # those ops stay on the slow path.
         self.fast_dispatch = fast_dispatch and spec.traffic_class is None
         self.monitor_every = max(1, monitor_every)
+        # fleet device keying (docs/fleet.md): extend every shape class with
+        # the host's DeviceFingerprint BP entries, so finals only recall on
+        # the matching device and heterogeneous DBs merge without
+        # clobbering.  Opt-in per op (None defers to REPRO_DEVICE_KEY) —
+        # flipping it changes every BP fingerprint, i.e. starts a fresh
+        # device-scoped namespace in an existing DB.
+        if device_key is None:
+            import os
+
+            device_key = os.environ.get(
+                "REPRO_DEVICE_KEY", ""
+            ).lower() in ("1", "true", "yes")
+        self.device_key = bool(device_key)
+        # drift watch (docs/fleet.md): a DriftMonitor fed by the same
+        # run-time trickle the RuntimeSelector gets; settable post-hoc
+        # (op.drift = monitor) since monitors usually outlive one op.
+        self.drift = drift
         self._fast: Dict[tuple, _FastEntry] = {}
         self.slow_resolutions = 0  # full shape-class resolutions performed
         self._states: Dict[str, OpState] = {}
@@ -261,7 +280,13 @@ class AutotunedOp:
         t0 = time.perf_counter()
         out = state.region(*args, **kwargs)
         jax.block_until_ready(out)
-        state.selector.observe(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        state.selector.observe(dt)
+        if self.drift is not None:
+            # the same trickle feeds the fleet drift watch: demotion /
+            # canary decisions ride the monitor_every observations the
+            # fast path already pays for (docs/fleet.md)
+            self.drift.observe(self, state, dt, args, kwargs)
         return out
 
     def _fast_lookup(self, args: tuple, kwargs: dict) -> Optional[_FastEntry]:
@@ -323,6 +348,10 @@ class AutotunedOp:
         if self.spec.traffic_class is not None:
             traffic = self.spec.traffic_class(*args, **kwargs)
             bp = bp.with_entries(**traffic.bp_entries())
+        if self.device_key:
+            from repro.fleet.fingerprint import device_bp_entries
+
+            bp = bp.with_entries(**device_bp_entries())
         fp = bp.fingerprint()
         # one canonical state per shape class even under concurrent callers:
         # a losing racer must not build (and possibly tune) a duplicate that
@@ -354,7 +383,33 @@ class AutotunedOp:
     def states(self) -> Dict[str, OpState]:
         return dict(self._states)
 
-    def tune_state(self, state: OpState, args: tuple, kwargs: dict) -> OpState:
+    def retune_state(
+        self, state: OpState, args: tuple, kwargs: dict
+    ) -> Dict[str, Any]:
+        """Fresh re-measure of an already-tuned class (the drift path).
+
+        Unlike :meth:`tune_state` this runs even when ``state.tuned`` /
+        ``from_cache`` — that is the point: the recorded winner drifted.
+        The search re-measures every candidate (``fresh``: the recorded
+        trial costs are what reality walked away from), does NOT select the
+        winner (the caller canaries it first), does NOT record a final (the
+        challenger earns that by surviving its canary window), and warms
+        the challenger so the canary hot swap never compiles.
+        """
+        winner = self._tune(state, args, kwargs, select=False, fresh=True,
+                            finalize=False)
+        fn = state.region.candidate(winner)
+        if (args or kwargs) and dict(winner) != dict(state.region.selected):
+            jax.block_until_ready(fn(*args, **kwargs))
+        return winner
+
+    def tune_state(
+        self,
+        state: OpState,
+        args: tuple,
+        kwargs: dict,
+        search: Optional[Search] = None,
+    ) -> OpState:
         """Run deferred tuning for an already-resolved state.
 
         This is the background-tuner entry point: ``resolve_deferred`` hands
@@ -372,7 +427,7 @@ class AutotunedOp:
         """
         if state.tuned or state.from_cache:
             return state
-        winner = self._tune(state, args, kwargs, select=False)
+        winner = self._tune(state, args, kwargs, select=False, search=search)
         state.warmed = self._warm_topk(state, args, kwargs)
         if (args or kwargs) and dict(winner) == dict(state.region.selected):
             # winner == the live default: _warm_topk skipped executing it
@@ -407,15 +462,25 @@ class AutotunedOp:
         return state
 
     def _tune(
-        self, state: OpState, args: tuple, kwargs: dict, select: bool = True
+        self,
+        state: OpState,
+        args: tuple,
+        kwargs: dict,
+        select: bool = True,
+        fresh: bool = False,
+        finalize: bool = True,
+        search: Optional[Search] = None,
     ) -> Dict[str, Any]:
         """Search this state's PP space; returns the winning point.
 
         ``select=False`` leaves the region's live selection untouched (the
-        background path swaps only after warming the winner).
+        background path swaps only after warming the winner).  ``fresh`` /
+        ``finalize`` implement the drift re-tune (see :meth:`retune_state`);
+        ``search`` overrides the strategy for this one run (the
+        BackgroundTuner's fleet-sharded mode).
         """
         region, bp = state.region, state.bp
-        search = self.search or self._default_search(state, args, kwargs)
+        search = search or self.search or self._default_search(state, args, kwargs)
         if self.cost_factory is not None:
             cost = self.cost_factory(region, bp, args, kwargs)
         else:
@@ -446,7 +511,8 @@ class AutotunedOp:
 
         tuner = Tuner(self.db)
         try:
-            result = tuner.tune(region, bp, budgeted, select=select, search=search)
+            result = tuner.tune(region, bp, budgeted, select=select,
+                                search=search, fresh=fresh, finalize=finalize)
             state.prescreen_evaluations += result.prescreen_evaluations
             winner = dict(result.best.point)
         except TrialBudgetExhausted:

@@ -16,7 +16,8 @@ On-disk layout (schema v2)::
            "layer": "before_execution",
            "best": {"point": {...}, "cost": 1.2e-3},
            "trials": {"<pp_key>": cost, ...},
-           "history": [...]                  # run-time layer observations
+           "history": [...],                 # run-time layer observations
+           "events": [...]                   # drift/canary audit log (docs/fleet.md)
         }, ...
       }
     }
@@ -36,6 +37,7 @@ import math
 import os
 import tempfile
 import threading
+import time
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 from .params import BasicParams, pp_key
@@ -50,6 +52,10 @@ SCHEMA_VERSION = 2
 HISTORY_LIMIT = 256
 RUNTIME_FLUSH_EVERY = 16
 
+# Tuning events (demotions, canary verdicts — docs/fleet.md) are the audit
+# trail, rare and precious: bounded higher-level, flushed on every record.
+EVENT_LIMIT = 256
+
 
 class TuningDB:
     SCHEMA_VERSION = SCHEMA_VERSION
@@ -60,6 +66,7 @@ class TuningDB:
         self._data: Dict[str, Dict[str, Any]] = {}
         self._disk_sig: Optional[Tuple[int, int]] = None
         self._runtime_obs = 0
+        self._event_seq = 0
         if path and os.path.exists(path):
             self._data = self._read_file(path)
             self._disk_sig = self._file_sig(path)
@@ -143,7 +150,61 @@ class TuningDB:
             if self._runtime_obs % RUNTIME_FLUSH_EVERY == 0:
                 self._flush()
 
+    def record_event(self, bp: BasicParams, kind: str, **payload: Any) -> Dict[str, Any]:
+        """Append one audit event to this entry's tuning-event log.
+
+        The drift/canary lifecycle (docs/fleet.md) records every transition
+        — ``demoted``, ``retune_scheduled``, ``canary_start``, ``promoted``,
+        ``rolled_back`` — so an operator can reconstruct why a host is
+        running the candidate it is running.  Events carry a wall-clock
+        ``t`` plus a per-process ``seq`` so a merged log orders
+        deterministically (see :func:`_merge_entries`).
+        """
+        with self._lock:
+            entry = self._entry(bp)
+            events = entry.setdefault("events", [])
+            self._event_seq += 1
+            ev = {"kind": str(kind), "t": round(time.time(), 6),
+                  "seq": self._event_seq, **payload}
+            events.append(ev)
+            if len(events) > EVENT_LIMIT:
+                del events[: len(events) - EVENT_LIMIT]
+            self._flush()
+            return dict(ev)
+
+    def demote_best(self, bp: BasicParams) -> bool:
+        """Strip the ``final`` flag from this entry's best (drift demotion).
+
+        The record itself survives (it is still the best *measured* result)
+        but ``tuned_point`` stops trusting it, so every consumer of the
+        zero-re-tune fast path re-enters tuning instead of freezing a
+        winner the runtime has drifted away from.  The record is marked
+        ``demoted`` so *flush-time reconciliation* (this process's own
+        writes racing the disk) does not resurrect the final flag from a
+        stale on-disk copy of the same point.  A symmetric ``merge`` with a
+        foreign DB that still holds the pre-demotion final CAN re-promote
+        it — finality wins there by design, because merge must stay a
+        commutative join and a foreign final is usually a genuinely newer
+        completed search; if the regression persists, the drift watch
+        simply demotes again (docs/fleet.md).  Returns True when a final
+        best was actually demoted.
+        """
+        with self._lock:
+            entry = self._data.get(bp.fingerprint())
+            best = entry.get("best") if entry else None
+            if not best or not best.get("final"):
+                return False
+            best.pop("final", None)
+            best["demoted"] = True
+            self._flush()
+            return True
+
     # -- read ----------------------------------------------------------------
+
+    def events(self, bp: BasicParams) -> list:
+        """The persisted tuning-event log for this entry (audit order)."""
+        entry = self._data.get(bp.fingerprint(), {})
+        return [dict(e) for e in entry.get("events", [])]
 
     def best_point(self, bp: BasicParams) -> Optional[Dict[str, Any]]:
         entry = self._data.get(bp.fingerprint())
@@ -257,6 +318,26 @@ class TuningDB:
                     seen[tc.label] = tc
         return [seen[k] for k in sorted(seen)]
 
+    def devices(self) -> list:
+        """Distinct device fingerprints present in the DB, sorted by label.
+
+        The fleet-merge counterpart of :meth:`traffic_classes`: after
+        ``TuningDB.merge`` unions DBs from heterogeneous hosts, this lists
+        which devices contributed entries (docs/fleet.md).  Entries without
+        the :class:`~repro.fleet.DeviceFingerprint` BP keys (single-host
+        DBs) are skipped.
+        """
+        from repro.fleet.fingerprint import DeviceFingerprint
+
+        seen: Dict[str, Any] = {}
+        with self._lock:
+            for entry in self._data.values():
+                bp = entry.get("bp", {})
+                if all(k in bp for k in DeviceFingerprint.BP_KEYS):
+                    df = DeviceFingerprint.from_bp_entries(bp)
+                    seen[df.label] = df
+        return [seen[k] for k in sorted(seen)]
+
     # -- internals -------------------------------------------------------------
 
     @staticmethod
@@ -273,11 +354,14 @@ class TuningDB:
             return dict(raw.get("entries", {}))
         return dict(raw)  # legacy v1: bare entries mapping
 
-    def _entry(self, bp: BasicParams, layer: str) -> Dict[str, Any]:
+    def _entry(self, bp: BasicParams, layer: Optional[str] = None) -> Dict[str, Any]:
         fp = bp.fingerprint()
         if fp not in self._data:
-            self._data[fp] = {"bp": bp.asdict(), "layer": layer, "trials": {}}
-        self._data[fp]["layer"] = layer
+            self._data[fp] = {
+                "bp": bp.asdict(), "layer": layer or "run_time", "trials": {}
+            }
+        if layer is not None:  # event writes must not clobber the layer tag
+            self._data[fp]["layer"] = layer
         return self._data[fp]
 
     @staticmethod
@@ -364,19 +448,36 @@ def _merge_entries(
 ) -> None:
     """Union ``other`` into ``into``.
 
-    Symmetric mode (``prefer_ours=False``, the public ``merge``): trial costs
-    keep the minimum, and for bests a *final* record beats a non-final one
-    regardless of cost — an interim best from a crashed sweep must never
-    displace a completed search's argmin; among equal finality, lower cost
-    wins.  ``prefer_ours=True`` (flush-time reconciliation) only adopts
-    shape classes / trial points / bests we don't already have: our values
-    are fresh measurements, the disk's may be stale.
+    Symmetric mode (``prefer_ours=False``, the public ``merge``) is a
+    *deterministic lattice join* — commutative, associative, idempotent —
+    because the fleet sync barrier (docs/fleet.md) must produce the same
+    merged DB no matter which worker's scratch results land first:
+
+    * trial costs keep the minimum per PP point;
+    * for bests a *final* record beats a non-final one regardless of cost —
+      an interim best from a crashed sweep must never displace a completed
+      search's argmin; among equal finality lower cost wins, and an exact
+      cost tie breaks on the records' canonical JSON so merge order cannot
+      pick the winner;
+    * histories and event logs become sorted unions (dedup by canonical
+      JSON; events order by their ``(t, seq)`` stamps) — order-insensitive
+      telemetry, deterministically arranged.
+
+    ``prefer_ours=True`` (flush-time reconciliation) only adopts shape
+    classes / trial points / bests we don't already have: our values are
+    fresh measurements, the disk's may be stale.
     """
     for fp, theirs in other.items():
         ours = into.get(fp)
         if ours is None:
-            into[fp] = json.loads(json.dumps(theirs))  # deep copy
+            into[fp] = json.loads(json.dumps(theirs, default=str))  # deep copy
             continue
+        # the layer tag is informational; merge to the furthest FIBER layer
+        # either writer reached so the join stays order-independent
+        if _LAYER_ORDER.get(theirs.get("layer"), -1) > _LAYER_ORDER.get(
+            ours.get("layer"), -1
+        ):
+            ours["layer"] = theirs["layer"]
         trials = ours.setdefault("trials", {})
         for key, cost in theirs.get("trials", {}).items():
             if key not in trials:
@@ -387,14 +488,71 @@ def _merge_entries(
         if their_best is not None and _best_beats(
             their_best, ours.get("best"), prefer_ours
         ):
-            ours["best"] = dict(their_best)
-        their_hist = theirs.get("history")
-        if their_hist:
-            hist = ours.setdefault("history", [])
-            seen = {json.dumps(h, sort_keys=True, default=str) for h in hist}
-            for h in their_hist:
-                if json.dumps(h, sort_keys=True, default=str) not in seen:
-                    hist.append(h)
+            ours["best"] = json.loads(json.dumps(their_best, default=str))
+        for field, key, limit in _LOG_FIELDS:
+            _union_log(ours, theirs, field, limit, key)
+    if not prefer_ours:
+        # normalize every result entry's logs (including receiver-only and
+        # freshly adopted ones): a merged DB is a canonical form, so any
+        # order/grouping of the same inputs is byte-identical.  Flush-time
+        # reconciliation skips this — it runs per trial write on the hot
+        # tuning path and has no order-independence contract to keep.
+        for entry in into.values():
+            for field, key, _limit in _LOG_FIELDS:
+                if entry.get(field):
+                    entry[field].sort(key=key)
+
+
+_LAYER_ORDER = {"install": 0, "before_execution": 1, "run_time": 2}
+
+
+def _canon(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, default=str)
+
+
+# (field, sort key, bound) for each append-only log a DB entry can carry.
+# Events order by their (wall clock, per-process seq) stamps so a merged
+# audit log reads in lifecycle order; history has no stamps and orders
+# canonically (it is an order-insensitive telemetry window).
+_LOG_FIELDS = (
+    ("history", _canon, HISTORY_LIMIT),
+    ("events",
+     lambda e: (e.get("t", 0.0), e.get("seq", 0), _canon(e)),
+     EVENT_LIMIT),
+)
+
+
+def _union_log(
+    ours: Dict[str, Any],
+    theirs: Mapping[str, Any],
+    field: str,
+    limit: int,
+    key,
+) -> None:
+    """Sorted max-multiplicity union of one append-only log field.
+
+    Logs are multisets (the same observation can legitimately repeat), so
+    the join takes each distinct record at the *maximum* multiplicity seen
+    on either side — the multiset operation that is commutative,
+    associative, and idempotent — then sorts deterministically.  Plain
+    concat-dedup is neither: a record duplicated on one side would survive
+    or collapse depending on merge direction.
+    """
+    counts: Dict[str, int] = {}
+    for log in (ours.get(field, []), theirs.get(field, [])):
+        side: Dict[str, int] = {}
+        for h in log:
+            c = _canon(h)
+            side[c] = side.get(c, 0) + 1
+        for c, n in side.items():
+            counts[c] = max(counts.get(c, 0), n)
+    if not counts:
+        return  # neither side has this log: don't materialize an empty one
+    merged = [json.loads(c) for c, n in counts.items() for _ in range(n)]
+    merged.sort(key=key)
+    if len(merged) > limit:
+        del merged[: len(merged) - limit]
+    ours[field] = merged
 
 
 def _best_beats(
@@ -405,8 +563,15 @@ def _best_beats(
     if prefer_ours:
         # flush reconciliation: keep our record unless the other writer
         # actually *finished* a search we haven't (our record_best, when it
-        # comes, overwrites unconditionally anyway)
+        # comes, overwrites unconditionally anyway).  A best we *demoted*
+        # (drift) must not have its final flag resurrected by the stale
+        # on-disk copy of the very same point.
+        if ours.get("demoted") and theirs.get("point") == ours.get("point"):
+            return False
         return bool(theirs.get("final")) and not bool(ours.get("final"))
     if bool(theirs.get("final")) != bool(ours.get("final")):
         return bool(theirs.get("final"))
-    return theirs["cost"] < ours["cost"]
+    if theirs["cost"] != ours["cost"]:
+        return theirs["cost"] < ours["cost"]
+    # exact tie: break on canonical JSON so A.merge(B) == B.merge(A)
+    return _canon(theirs) < _canon(ours)

@@ -188,6 +188,37 @@ class ParamSpace:
         sub._members = members  # ordered enumeration (prescreen rank order)
         return sub
 
+    def shard(self, n: int, policy: str = "stride") -> "Tuple[ParamSpace, ...]":
+        """Deterministically partition this space into ≤ ``n`` subset spaces.
+
+        The fleet shard protocol (docs/fleet.md): every feasible point lands
+        in exactly one shard, assignment depends only on the enumeration
+        order (itself deterministic), and the union of shard argmins is the
+        global argmin — which is what makes the N-worker fleet search return
+        the single-process winner by construction.
+
+        ``policy="stride"`` deals points round-robin (shard ``i`` takes
+        enumeration indices ``i, i+n, ...``) so heavy-tail spaces balance;
+        ``policy="block"`` gives each shard one contiguous run, keeping a
+        prescreen's rank order intact within a shard.  Shards that would be
+        empty (fewer points than workers) are dropped, so the result may
+        have fewer than ``n`` members — never an empty subset space.
+        """
+        if n < 1:
+            raise ValueError(f"shard count must be >= 1, got {n}")
+        if policy not in ("stride", "block"):
+            raise ValueError(f"unknown shard policy {policy!r}; "
+                             "expected 'stride' or 'block'")
+        points = [dict(p) for p in self.points()]
+        if not points:
+            raise ValueError("ParamSpace has no feasible point to shard")
+        if policy == "stride":
+            groups = [points[i::n] for i in range(n)]
+        else:
+            size = -(-len(points) // n)  # ceil division: first shards fill up
+            groups = [points[i * size : (i + 1) * size] for i in range(n)]
+        return tuple(self.subset(g) for g in groups if g)
+
     def neighbours(self, point: Mapping[str, Any]) -> Iterator[Dict[str, Any]]:
         """Coordinate-move neighbourhood (for hillclimb search): all feasible
         points differing from ``point`` in exactly one parameter."""

@@ -41,6 +41,8 @@ class Tuner:
         layer: str = "before_execution",
         select: bool = True,
         search: Optional[Search] = None,
+        fresh: bool = False,
+        finalize: bool = True,
     ) -> SearchResult:
         """AT = argmin_PP cost(PP | BP).  Records every trial in the DB.
 
@@ -48,6 +50,14 @@ class Tuner:
         the staged pipeline builds a per-shape-class search (warm-start
         seed, prescreen over this class's example args) that cannot be
         pinned at construction time.
+
+        ``fresh=True`` disables the recorded-trial short-circuit: every
+        point is re-measured (still recorded).  This is the drift re-tune
+        path (docs/fleet.md) — the recorded costs are exactly what the
+        runtime has drifted away from, so replaying them would just
+        reconfirm the demoted winner.  ``finalize=False`` skips the final
+        ``record_best`` (the re-tune's challenger is only finalized after
+        it survives its canary window).
         """
         if layer not in LAYERS:
             raise ValueError(f"unknown FIBER layer {layer!r}; expected one of {LAYERS}")
@@ -65,7 +75,7 @@ class Tuner:
                 c = float(cost(point, budget))
                 self.db.record_trial(bp, point, c, layer)
                 return c
-            prior = self.db.trial_cost(bp, point)
+            prior = None if fresh else self.db.trial_cost(bp, point)
             if prior is not None:
                 return prior  # resume support: interrupted AT re-uses trials
             c = float(cost(point))
@@ -76,7 +86,8 @@ class Tuner:
         caching_cost.supports_budget = supports_budget
 
         result = (search or self.search).run(region.space, caching_cost)
-        self.db.record_best(bp, result.best.point, result.best.cost, layer)
+        if finalize:
+            self.db.record_best(bp, result.best.point, result.best.cost, layer)
         if select:
             region.select(result.best.point)
         return result

@@ -1,0 +1,41 @@
+"""repro.fleet — the fleet tuning control plane (docs/fleet.md).
+
+Three cooperating pieces, all installed on top of the unchanged core
+search/DB machinery:
+
+* :class:`~repro.fleet.fingerprint.DeviceFingerprint` — device identity as
+  a composable BP dimension, so TuningDBs from heterogeneous hosts merge
+  without clobbering and finals only transfer between matching targets;
+* :class:`~repro.fleet.coordinator.FleetCoordinator` /
+  :class:`~repro.fleet.coordinator.FleetSearch` — deterministic sharded
+  search across N workers (threads or ``multiprocessing`` spawn) with a
+  ``TuningDB.merge`` barrier that reproduces the single-process winner by
+  construction;
+* :class:`~repro.fleet.drift.DriftMonitor` — EWMA drift watch over the
+  dispatch fast path's run-time trickle: demote a drifted final, re-tune
+  off the hot path, canary the challenger, promote or roll back — every
+  transition persisted in the DB's tuning-event log.
+"""
+from .coordinator import (
+    BACKENDS,
+    SHARD_POLICIES,
+    FleetCoordinator,
+    FleetResult,
+    FleetSearch,
+    WorkerReport,
+)
+from .drift import DriftMonitor
+from .fingerprint import DeviceFingerprint, device_bp_entries, local_device
+
+__all__ = [
+    "BACKENDS",
+    "SHARD_POLICIES",
+    "DeviceFingerprint",
+    "DriftMonitor",
+    "FleetCoordinator",
+    "FleetResult",
+    "FleetSearch",
+    "WorkerReport",
+    "device_bp_entries",
+    "local_device",
+]

@@ -1,0 +1,146 @@
+"""Device fingerprinting — the fleet's BP dimension (docs/fleet.md).
+
+The paper's premise is that "computers have diversified architectures":
+ppOpen-AT re-runs its search per machine because a winner tuned on FX100
+does not transfer to an Ivy Bridge Xeon.  Our TuningDB already keys entries
+by shape class, traffic class, and mesh fingerprint — but not by *machine*,
+so DBs from heterogeneous hosts would clobber each other's finals on merge.
+
+:class:`DeviceFingerprint` closes that gap the same way
+:class:`~repro.core.traffic.TrafficClass` did for serving traffic: it is a
+small frozen record of the facts that decide whether a tuned winner
+transfers — accelerator backend, platform/device kind, device count, host
+core count, a power-of-two memory bucket, and the repro DB schema version —
+that flattens into BP entries (:meth:`bp_entries`) and composes with any
+shape class via ``BasicParams.with_entries``.
+
+Recall semantics (wired in :class:`~repro.core.autotuned.AutotunedOp` via
+``device_key=True``): a *final* best is recalled only for the exactly
+matching device; any other device's final is still reachable as a
+cross-device warm start through ``TuningDB.nearest_tuned`` — every
+fingerprint field the devices disagree on adds distance, so the nearest
+sibling *device* seeds the search when no same-device sibling class exists.
+
+Memory is bucketed to a power of two GiB: two otherwise identical hosts
+whose DIMMs differ by a few hundred MB must share tuning results, while a
+64 GiB host must not adopt winners measured under 8 GiB pressure.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional
+
+_PREFIX = "device_"
+
+
+@dataclass(frozen=True)
+class DeviceFingerprint:
+    """Identity of one tuning target, as a composable BP dimension."""
+
+    backend: str       # jax.default_backend(): "cpu" / "gpu" / "tpu"
+    platform: str      # device kind, e.g. "cpu", "TPU v5e", "NVIDIA H100"
+    device_count: int  # visible accelerator devices
+    host_cores: int    # os.cpu_count() — the paper's max-thread dimension
+    memory_gib: int    # pow2 bucket of host memory
+    schema: int        # repro TuningDB schema version
+
+    BP_KEYS = (
+        f"{_PREFIX}backend",
+        f"{_PREFIX}platform",
+        f"{_PREFIX}count",
+        f"{_PREFIX}cores",
+        f"{_PREFIX}mem_gib",
+        f"{_PREFIX}schema",
+    )
+
+    @classmethod
+    def detect(cls) -> "DeviceFingerprint":
+        """Fingerprint the running host (cached — see :func:`local_device`)."""
+        import jax
+
+        from repro.core.db import SCHEMA_VERSION
+
+        devices = jax.devices()
+        return cls(
+            backend=str(jax.default_backend()),
+            platform=str(getattr(devices[0], "device_kind", devices[0].platform)),
+            device_count=len(devices),
+            host_cores=os.cpu_count() or 1,
+            memory_gib=_pow2_bucket(_host_memory_gib()),
+            schema=SCHEMA_VERSION,
+        )
+
+    def bp_entries(self) -> Dict[str, Any]:
+        """Flat BP entries, mirroring ``TrafficClass.bp_entries`` /
+        ``mesh_bp_entries`` so device identity composes orthogonally."""
+        return {
+            f"{_PREFIX}backend": self.backend,
+            f"{_PREFIX}platform": self.platform,
+            f"{_PREFIX}count": int(self.device_count),
+            f"{_PREFIX}cores": int(self.host_cores),
+            f"{_PREFIX}mem_gib": int(self.memory_gib),
+            f"{_PREFIX}schema": int(self.schema),
+        }
+
+    @classmethod
+    def from_bp_entries(cls, bp: Mapping[str, Any]) -> "DeviceFingerprint":
+        return cls(
+            backend=str(bp[f"{_PREFIX}backend"]),
+            platform=str(bp[f"{_PREFIX}platform"]),
+            device_count=int(bp[f"{_PREFIX}count"]),
+            host_cores=int(bp[f"{_PREFIX}cores"]),
+            memory_gib=int(bp[f"{_PREFIX}mem_gib"]),
+            schema=int(bp[f"{_PREFIX}schema"]),
+        )
+
+    @property
+    def label(self) -> str:
+        return (
+            f"{self.backend}/{self.platform.replace(' ', '_')}"
+            f"x{self.device_count}/c{self.host_cores}/m{self.memory_gib}g"
+            f"/v{self.schema}"
+        )
+
+
+def _host_memory_gib() -> float:
+    """Total host memory in GiB; 1.0 when undetectable (still deterministic)."""
+    try:
+        page = os.sysconf("SC_PAGE_SIZE")
+        pages = os.sysconf("SC_PHYS_PAGES")
+        if page > 0 and pages > 0:
+            return (page * pages) / 2**30
+    except (ValueError, OSError, AttributeError):
+        pass
+    return 1.0
+
+
+def _pow2_bucket(gib: float) -> int:
+    """Round up to the next power-of-two GiB (minimum 1)."""
+    n = 1
+    while n < gib:
+        n *= 2
+    return n
+
+
+_LOCAL: Optional[DeviceFingerprint] = None
+
+
+def local_device() -> DeviceFingerprint:
+    """The running host's fingerprint, detected once per process.
+
+    Detection touches ``jax.devices()`` (which initializes the backend), so
+    it is deliberately lazy — importing :mod:`repro.fleet` must stay free.
+    """
+    global _LOCAL
+    if _LOCAL is None:
+        _LOCAL = DeviceFingerprint.detect()
+    return _LOCAL
+
+
+def device_bp_entries(device: Optional[DeviceFingerprint] = None) -> Dict[str, Any]:
+    """BP entries for ``device`` (default: the running host).
+
+    The one-liner shape-class extension: ``bp.with_entries(**device_bp_entries())``.
+    """
+    return (device or local_device()).bp_entries()

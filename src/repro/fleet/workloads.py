@@ -1,0 +1,109 @@
+"""Canned fleet workloads (docs/fleet.md).
+
+Two kinds of search problem the fleet CLI / benchmarks / CI smoke drive:
+
+* ``demo`` — a module-level *picklable* analytic cost over a small grid.
+  This is what the ``multiprocessing`` spawn backend exercises in CI: no
+  XLA, no example arrays, deterministic winner, byte-identical across
+  worker counts and shard policies.
+* the five registered Pallas kernels — real regions with small example
+  inputs and a wall-clock cost closure (thread backend only: the closure
+  holds live device arrays, which must not cross a spawn boundary).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable, Dict, Mapping, Tuple
+
+from repro.core.params import ParamSpace, PerfParam
+
+KERNELS = ("exb", "flash_attention", "rglru_scan", "ssm_scan", "stress")
+
+DEMO_VARIANT_PENALTY = {"ij": 0.00, "ji": 0.07, "fused": 0.21}
+
+
+def demo_space(blocks: int = 6) -> ParamSpace:
+    """A small block × loop-variant grid (the paper's two PP axes)."""
+    return ParamSpace([
+        PerfParam("block", tuple(2 ** i for i in range(3, 3 + blocks))),
+        PerfParam("variant", tuple(sorted(DEMO_VARIANT_PENALTY))),
+    ])
+
+
+def demo_cost(point: Mapping[str, Any]) -> float:
+    """Deterministic analytic cost with a unique argmin (block=64, ij).
+
+    Module-level on purpose: the spawn backend pickles this by reference.
+    """
+    return (
+        abs(math.log2(int(point["block"]) / 64.0))
+        + DEMO_VARIANT_PENALTY[str(point["variant"])]
+    )
+
+
+def example_args(name: str) -> Tuple[Any, ...]:
+    """Small example inputs for one registered kernel (smoke-sized)."""
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(0)
+    if name == "flash_attention":
+        q = jax.random.normal(key, (2, 256, 4, 64), jnp.float32)
+        return (q, q, q)
+    if name == "ssm_scan":
+        seq, d = 256, 512
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (2, seq, d), jnp.float32)
+        dt = jnp.full((2, seq, d), 0.01, jnp.float32)
+        A = jax.random.normal(ks[1], (d, 16)) * 0.1
+        Bc = jax.random.normal(ks[2], (2, seq, 16))
+        Cc = jax.random.normal(ks[3], (2, seq, 16))
+        D = jnp.ones((d,))
+        return (x, dt, A, Bc, Cc, D)
+    if name == "rglru_scan":
+        seq, w = 256, 512
+        ks = jax.random.split(key, 3)
+        x = jax.random.normal(ks[0], (2, seq, w), jnp.float32)
+        r = jax.nn.sigmoid(jax.random.normal(ks[1], (2, seq, w)))
+        i = jax.nn.sigmoid(jax.random.normal(ks[2], (2, seq, w)))
+        lam = jax.nn.sigmoid(jax.random.normal(key, (w,)))
+        return (x, r, i, lam)
+    if name == "exb":
+        from repro.kernels.exb.ref import make_inputs
+
+        return (make_inputs(key, dims=(16, 16, 128, 65)),)
+    if name == "stress":
+        from repro.kernels.stress.ref import make_inputs
+
+        return (make_inputs(key, dims=(16, 16, 32)),)
+    raise KeyError(f"unknown kernel {name!r}; known: {KERNELS} + ('demo',)")
+
+
+def kernel_problem(name: str) -> Tuple[Any, ParamSpace, Callable[[Mapping[str, Any]], float]]:
+    """(region, space, measured cost) for one registered kernel.
+
+    The cost compiles (untimed) then takes a best-of-3 wall clock — the
+    bench-grade measured cost, as a closure over the example args (thread
+    backend only).
+    """
+    import jax
+
+    from repro.core.registry import get_kernel
+
+    spec = get_kernel(name)
+    args = example_args(name)
+    bp = spec.shape_class(*args)
+    region = spec.make_region(bp)
+
+    def cost(point: Mapping[str, Any]) -> float:
+        fn = region.instantiate(point)
+        jax.block_until_ready(fn(*args))  # compile, untimed
+        best = math.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return region, region.space, cost

@@ -1,0 +1,101 @@
+"""Fleet tuning CLI — sharded before-execution AT (docs/fleet.md).
+
+    PYTHONPATH=src python -m repro.launch.fleet --kernel demo \
+        --workers 2 --backend spawn --shard-policy stride --sync-every 4
+
+Partitions the kernel's PP space across ``--workers`` workers (in-process
+threads or ``multiprocessing`` spawn), each running the existing search on
+its shard against a scratch TuningDB, then merges at the barrier and
+records the fleet winner — by construction the single-process winner.
+
+``--kernel demo`` is a deterministic analytic problem (the only one the
+spawn backend accepts: real-kernel costs close over device arrays); any
+registered kernel name runs wall-clock measured on the thread backend.
+``--check-equivalence`` re-runs single-worker and verifies the winner
+matches — the CI smoke gate for the multiprocessing path.
+"""
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--kernel", default="demo",
+        help="'demo' (analytic, spawn-safe) or a registered kernel name",
+    )
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--shard-policy", choices=("stride", "block"), default="stride")
+    ap.add_argument("--backend", choices=("thread", "spawn"), default="thread")
+    ap.add_argument(
+        "--sync-every", type=int, default=8,
+        help="trials between scratch-DB syncs (0 = merge barrier only)",
+    )
+    ap.add_argument("--db", default=None, help="persistent TuningDB path")
+    ap.add_argument("--scratch-dir", default=None,
+                    help="directory for per-worker scratch DBs")
+    ap.add_argument(
+        "--no-device-key", action="store_true",
+        help="do not namespace DB entries under the host DeviceFingerprint",
+    )
+    ap.add_argument(
+        "--check-equivalence", action="store_true",
+        help="re-run with one worker and assert the same winner (CI smoke)",
+    )
+    args = ap.parse_args()
+
+    from repro.core import BasicParams, TuningDB
+    from repro.fleet import FleetCoordinator, device_bp_entries, local_device
+    from repro.fleet.workloads import demo_cost, demo_space, kernel_problem
+
+    if args.kernel == "demo":
+        space, cost = demo_space(), demo_cost
+    else:
+        if args.backend == "spawn":
+            ap.error("--backend spawn requires --kernel demo "
+                     "(measured kernel costs close over device arrays)")
+        _, space, cost = kernel_problem(args.kernel)
+
+    entries = {} if args.no_device_key else device_bp_entries()
+    bp = BasicParams.make(kernel=f"fleet/{args.kernel}", **entries)
+    db = TuningDB(args.db) if args.db else None
+
+    coordinator = FleetCoordinator(
+        workers=args.workers,
+        shard_policy=args.shard_policy,
+        backend=args.backend,
+        sync_every=args.sync_every,
+        scratch_dir=args.scratch_dir,
+    )
+    fleet = coordinator.search(space, cost, bp=bp, db=db)
+
+    print(f"device: {'-' if args.no_device_key else local_device().label}")
+    print(f"space: {space.size()} candidates, {len(fleet.workers)} workers "
+          f"({args.backend}/{args.shard_policy}, sync_every={args.sync_every})")
+    for w in fleet.workers:
+        print(f"  worker {w.worker}: {w.points} points, "
+              f"{w.evaluations} evals, {w.wall_s * 1e3:.1f} ms, "
+              f"shard best {w.best_point} @ {w.best_cost:.3e}")
+    print(f"fleet winner: {json.dumps(fleet.best.point, sort_keys=True)} "
+          f"@ {fleet.best.cost:.3e} ({fleet.evaluations} total evaluations)")
+
+    if args.check_equivalence:
+        single = FleetCoordinator(
+            workers=1, shard_policy=args.shard_policy, backend="thread",
+            sync_every=0,
+        ).search(space, cost, bp=bp)
+        if single.best.point != fleet.best.point:
+            raise SystemExit(
+                f"FLEET EQUIVALENCE VIOLATED: {args.workers}-worker winner "
+                f"{fleet.best.point} != single-process winner {single.best.point}"
+            )
+        print(f"equivalence OK: {args.workers}-worker winner == "
+              "single-process winner")
+
+    if args.db:
+        print(f"tuning DB: {args.db} "
+              f"({len(fleet.merged.fingerprints())} entries)")
+
+
+if __name__ == "__main__":
+    main()

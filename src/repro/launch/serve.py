@@ -41,13 +41,40 @@ def main() -> None:
              "full serve step before serving (docs/program.md)",
     )
     ap.add_argument("--tuning-db", default=None, help="persistent TuningDB path")
+    ap.add_argument(
+        "--device-key", action="store_true",
+        help="namespace DB entries under the host DeviceFingerprint, so a "
+             "fleet-shared DB never recalls a foreign host's final "
+             "(docs/fleet.md)",
+    )
+    ap.add_argument(
+        "--drift-factor", type=float, default=None,
+        help="enable the drift watch: demote + canary-re-tune a final whose "
+             "observed cost exceeds its recorded cost by this factor "
+             "(requires --background-tune: the re-tune must stay off the "
+             "hot path)",
+    )
+    ap.add_argument(
+        "--fleet-workers", type=int, default=None,
+        help="shard background searches across N in-process fleet workers "
+             "(requires --background-tune; best for compile-dominated "
+             "costs — concurrent measured timings on one device reflect "
+             "contention)",
+    )
     args = ap.parse_args()
+    if args.drift_factor and not args.background_tune:
+        ap.error("--drift-factor requires --background-tune "
+                 "(an inline re-tune would run the search on the hot path)")
+    if args.fleet_workers and not args.background_tune:
+        ap.error("--fleet-workers requires --background-tune "
+                 "(there is no background search to shard without it)")
 
     import jax
 
     from repro.configs import get_config
     from repro.core import TuningDB
     from repro.data import mixed_traffic_trace, synthetic_requests
+    from repro.fleet import DriftMonitor, FleetCoordinator
     from repro.models import init_params, param_specs
     from repro.runtime import BackgroundTuner, Server
 
@@ -60,7 +87,15 @@ def main() -> None:
             cfg, args.requests, args.prompt_len, args.new_tokens
         )
 
-    tuner = BackgroundTuner() if args.background_tune else None
+    fleet = (
+        FleetCoordinator(workers=args.fleet_workers, backend="thread")
+        if args.fleet_workers else None
+    )
+    tuner = BackgroundTuner(fleet=fleet) if args.background_tune else None
+    drift = (
+        DriftMonitor(background=tuner, factor=args.drift_factor)
+        if args.drift_factor else None
+    )
     server = Server(
         cfg,
         params,
@@ -68,6 +103,8 @@ def main() -> None:
         tuning_db=TuningDB(args.tuning_db) if args.tuning_db else None,
         background_tuner=tuner,
         inline_tune=args.inline_tune,
+        device_key=args.device_key,
+        drift_monitor=drift,
     )
     if args.joint_tune:
         r = server.joint_tune(requests)
@@ -89,6 +126,9 @@ def main() -> None:
             print("WARNING: background tuning did not drain within 300s")
         for label, err in tuner.errors:
             print(f"WARNING: background tuning failed for {label}: {err!r}")
+    if drift is not None and drift.transitions:
+        kinds = ", ".join(kind for _, kind in drift.transitions)
+        print(f"drift transitions: {kinds}")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,11 @@ def main() -> None:
         help="per-member survivor count (default: the whole member space)",
     )
     ap.add_argument("--tuning-db", default=None, help="persistent TuningDB path")
+    ap.add_argument(
+        "--device-key", action="store_true",
+        help="namespace DB entries (and the joint-program fingerprint) "
+             "under the host DeviceFingerprint (docs/fleet.md)",
+    )
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -57,7 +62,7 @@ def main() -> None:
             total_steps=args.steps, ckpt_dir=args.ckpt_dir,
             n_microbatches=args.microbatches,
             joint_tune=args.joint_tune, joint_cap=args.joint_cap,
-            joint_k=args.joint_k,
+            joint_k=args.joint_k, device_key=args.device_key,
         ),
         tuning_db=TuningDB(args.tuning_db) if args.tuning_db else None,
     )

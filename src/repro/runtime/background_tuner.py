@@ -50,13 +50,31 @@ class TuneJob:
     kwargs: dict
     label: str
     on_complete: Optional[Callable[[OpState], None]] = None
+    # drift re-tune (docs/fleet.md): run even though the class is tuned,
+    # fresh-measured, unselected and unfinalized; the winner (or None on
+    # failure) goes to ``on_winner`` — the DriftMonitor's canary entry.
+    retune: bool = False
+    on_winner: Optional[Callable[[Optional[dict]], None]] = None
 
 
 class BackgroundTuner:
-    """Worker thread + queue that runs before-execution AT off the hot path."""
+    """Worker thread + queue that runs before-execution AT off the hot path.
 
-    def __init__(self, name: str = "repro-background-tuner") -> None:
+    ``fleet`` (optional, docs/fleet.md): a
+    :class:`~repro.fleet.FleetCoordinator` — every queued search is then
+    sharded across the coordinator's in-process workers with the merge
+    barrier landing results in the op's DB (the spawn backend cannot sit
+    here: the op's measured cost closes over live arrays).  Sharding
+    pays off for compile-dominated costs; concurrent *measured* timings
+    on one device include cross-worker contention, so winners stay
+    supervised by the run-time layer rather than trusted blindly.
+    """
+
+    def __init__(
+        self, name: str = "repro-background-tuner", fleet: Optional[Any] = None
+    ) -> None:
         self.name = name
+        self.fleet = fleet
         self._queue: "queue.Queue[Optional[TuneJob]]" = queue.Queue()
         self._cv = threading.Condition()
         self._inflight: set = set()  # BP fingerprints queued or tuning now
@@ -127,6 +145,37 @@ class BackgroundTuner:
         self._queue.put(TuneJob(op, state, args, kwargs, label, on_complete))
         return state
 
+    def submit_retune(
+        self,
+        op: AutotunedOp,
+        state: OpState,
+        args: tuple = (),
+        kwargs: Optional[dict] = None,
+        on_winner: Optional[Callable[[Optional[dict]], None]] = None,
+    ) -> bool:
+        """Queue a *fresh* re-measure of an already-tuned class.
+
+        The DriftMonitor's off-hot-path re-tune: unlike :meth:`submit` this
+        enqueues even though the class is tuned (that is the point — its
+        winner drifted), clears any earlier failure mark (a re-tune is an
+        explicit retry), and hands the challenger point to ``on_winner``
+        instead of selecting it — the canary window decides the hot apply.
+        Returns False when the class is already queued or tuning.
+        """
+        self.start()
+        fp = state.bp.fingerprint()
+        with self._cv:
+            if fp in self._inflight:
+                return False
+            self._failed.pop(fp, None)
+            self._inflight.add(fp)
+        label = state.traffic.label if state.traffic else op.spec.name
+        self._queue.put(TuneJob(
+            op, state, args, dict(kwargs or {}), label,
+            retune=True, on_winner=on_winner,
+        ))
+        return True
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every queued class is tuned; False on timeout."""
         with self._cv:
@@ -175,19 +224,45 @@ class BackgroundTuner:
                 return
             fp = job.state.bp.fingerprint()
             try:
-                job.op.tune_state(job.state, job.args, job.kwargs)
+                if job.retune:
+                    self._run_retune(job)
+                else:
+                    job.op.tune_state(
+                        job.state, job.args, job.kwargs,
+                        search=self._fleet_search(job),
+                    )
             except BaseException as e:  # a bad class must not kill the worker
                 self.errors.append((job.label, e))
                 with self._cv:  # never retried: submit() skips failed classes
-                    self._failed[fp] = job.label
+                    if not job.retune:
+                        self._failed[fp] = job.label
             else:
-                self.completed.append((job.label, job.state))
-                if job.on_complete is not None:
-                    try:  # a callback bug is an error, not a failed tune
-                        job.on_complete(job.state)
-                    except BaseException as e:
-                        self.errors.append((job.label, e))
+                if not job.retune:
+                    self.completed.append((job.label, job.state))
+                    if job.on_complete is not None:
+                        try:  # a callback bug is an error, not a failed tune
+                            job.on_complete(job.state)
+                        except BaseException as e:
+                            self.errors.append((job.label, e))
             finally:
                 with self._cv:
                     self._inflight.discard(fp)
                     self._cv.notify_all()
+
+    def _fleet_search(self, job: TuneJob):
+        """This job's search override: fleet-sharded when a coordinator is set."""
+        if self.fleet is None:
+            return None
+        return self.fleet.as_search(bp=job.state.bp, db=job.op.db)
+
+    def _run_retune(self, job: TuneJob) -> None:
+        winner: Optional[dict] = None
+        try:
+            winner = job.op.retune_state(job.state, job.args, job.kwargs)
+        except BaseException as e:
+            self.errors.append((job.label, e))
+        if job.on_winner is not None:
+            try:  # None signals a failed re-tune to the drift monitor
+                job.on_winner(winner)
+            except BaseException as e:
+                self.errors.append((job.label, e))

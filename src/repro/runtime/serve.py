@@ -118,6 +118,8 @@ class Server:
         mesh: Any = None,
         background_tuner: Optional[BackgroundTuner] = None,
         inline_tune: bool = False,
+        device_key: bool = False,
+        drift_monitor: Optional[Any] = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
@@ -127,6 +129,16 @@ class Server:
         self.mesh = mesh
         self.background = background_tuner
         self.inline_tune = inline_tune
+        # fleet integration (docs/fleet.md): device_key namespaces every
+        # traffic class under the host's DeviceFingerprint so a shared
+        # fleet DB never hands this server a foreign host's final; the
+        # DriftMonitor rides the serve loop's existing run-time
+        # observations and mirrors its selections into the
+        # DegreeController exactly like tuned winners do.
+        self.device_key = device_key
+        self.drift = drift_monitor
+        if self.drift is not None and self.drift.on_apply is None:
+            self.drift.on_apply = self._on_tuned
         self.degree = DegreeController(max_degree=batch_size)
         self._prefill = jax.jit(lambda p, b: prefill_fn(p, b, cfg))
         self._decode = jax.jit(lambda p, b, c: decode_fn(p, b, c, cfg))
@@ -206,7 +218,8 @@ class Server:
             replace=True,
         )
         return AutotunedOp(
-            spec, db=self.db, tune=self.inline_tune, warm=False, monitor=False
+            spec, db=self.db, tune=self.inline_tune, warm=False, monitor=False,
+            device_key=self.device_key,
         )
 
     def _make_decode_op(self) -> AutotunedOp:
@@ -258,7 +271,8 @@ class Server:
             replace=True,
         )
         return AutotunedOp(
-            spec, db=self.db, tune=self.inline_tune, warm=False, monitor=False
+            spec, db=self.db, tune=self.inline_tune, warm=False, monitor=False,
+            device_key=self.device_key,
         )
 
     # -- tuning hand-off -------------------------------------------------------
@@ -372,13 +386,22 @@ class Server:
             self._on_tuned(pstate)
             self._on_tuned(dstate)
 
+        if self.device_key:
+            # the program fingerprint is device-namespaced like every other
+            # DB key on this server: a joint winner measured on one host
+            # must not be recalled on a different one (docs/fleet.md)
+            from repro.fleet.fingerprint import device_bp_entries
+
+            device_extra = device_bp_entries()
+        else:
+            device_extra = {}
         return ProgramSpec(
             f"serve_step/{self.cfg.name}", members, db=self.db, build=build,
             on_apply=on_apply,
             extra={
                 "batch": self.batch_size, "plen": int(plen),
                 "steps": int(decode_steps), "backend": jax.default_backend(),
-                **mesh_bp_entries(self.mesh),
+                **mesh_bp_entries(self.mesh), **device_extra,
             },
         )
 
@@ -441,6 +464,14 @@ class Server:
                 # regressed winner demotes to the next-best precompiled one
                 if pstate.selector.observe(prefill_elapsed):
                     self._on_tuned(pstate)  # keep the controller in sync
+            if self.drift is not None:
+                # the fleet drift watch rides the same observation; the
+                # call args are captured so a scheduled re-tune measures
+                # candidates on a real batch (docs/fleet.md)
+                self.drift.observe(
+                    self.prefill_op, pstate, prefill_elapsed,
+                    (self.params, batch),
+                )
 
             n_steps = max(r.max_new_tokens for r in group)
             gen = [[] for _ in group]
@@ -473,6 +504,11 @@ class Server:
                 # observation per group, never per token
                 if dstate.selector.observe(float(np.median(step_times))):
                     self._on_tuned(dstate)  # keep the controller in sync
+            if self.drift is not None and step_times:
+                self.drift.observe(
+                    self.decode_op, dstate, float(np.median(step_times)),
+                    (self.params, dbatch, cache),
+                )
             self.stats.batch_latencies.append(time.perf_counter() - t_batch)
 
             for gi, r in enumerate(group[: len(requests[i : i + self.batch_size])]):

@@ -74,6 +74,11 @@ class TrainLoopConfig:
     joint_cap: Optional[int] = 16
     joint_k: Optional[int] = None
     remat_candidates: Sequence[str] = ("none", "full")
+    # fleet device keying (docs/fleet.md): namespace the train step's BP —
+    # and the joint program fingerprint — under the host's
+    # DeviceFingerprint, so a fleet-shared TuningDB never hands this host a
+    # degree/remat winner measured on different hardware.
+    device_key: bool = False
 
 
 def make_train_step(
@@ -163,6 +168,10 @@ class Trainer:
         degrees = tuple(loop_cfg.microbatch_candidates)
         self._step_remat = cfg.remat
         bp = BasicParams.make(arch=cfg.name, kind="train_runtime", micro=degrees)
+        if loop_cfg.device_key:
+            from repro.fleet.fingerprint import device_bp_entries
+
+            bp = bp.with_entries(**device_bp_entries())
         spec = register_kernel(
             KernelSpec(
                 name=f"train_step/{cfg.name}",
@@ -251,6 +260,10 @@ class Trainer:
             "batch": int(tokens.shape[0]) if tokens is not None else 0,
             "seq": int(tokens.shape[1]) if tokens is not None else 0,
         }
+        if loop.device_key:  # device-namespaced program fingerprint
+            from repro.fleet.fingerprint import device_bp_entries
+
+            extra.update(device_bp_entries())
         return ProgramSpec(
             f"train_step/{cfg.name}", members, db=self.db, build=build,
             on_apply=self._on_joint_apply, extra=extra,

@@ -1,0 +1,122 @@
+"""TuningDB.merge lattice properties (ISSUE 5 satellite).
+
+The fleet sync barrier (docs/fleet.md) merges worker scratch DBs in
+whatever order workers finish, and periodic syncs mean the same scratch
+state can land more than once.  Correctness therefore rests on merge being
+a *join*: commutative, associative, and idempotent over arbitrary entry
+sets — not just the disjoint-shape-class happy path the older tests cover.
+
+DBs are generated as operation sequences (trials, bests — final and
+interim, runtime observations, events) over small colliding domains, so
+the generator actually exercises the conflict policies: min-cost trials,
+finality-then-cost-then-canonical-JSON bests, sorted-union logs.
+"""
+import json
+
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import BasicParams, TuningDB  # noqa: E402
+
+# Small colliding domains: few shape classes, few points, few costs, so
+# generated DBs overlap on entries, points, and exact costs (tie-breaks).
+BPS = [BasicParams.make(kernel="k", n=n) for n in (1, 2)]
+POINTS = [{"i": 0}, {"i": 1}, {"i": 2}]
+COSTS = [0.5, 1.0, 2.0]
+LAYERS = ["install", "before_execution"]
+
+op_strategy = st.one_of(
+    st.tuples(st.just("trial"), st.integers(0, 1), st.integers(0, 2),
+              st.integers(0, 2), st.integers(0, 1)),
+    st.tuples(st.just("best"), st.integers(0, 1), st.integers(0, 2),
+              st.integers(0, 2), st.integers(0, 1)),
+    st.tuples(st.just("obs"), st.integers(0, 1), st.integers(0, 2),
+              st.integers(0, 2)),
+    st.tuples(st.just("event"), st.integers(0, 1),
+              st.sampled_from(["demoted", "promoted", "rolled_back"])),
+)
+
+
+def build_db(ops) -> TuningDB:
+    db = TuningDB()
+    for op in ops:
+        kind = op[0]
+        if kind == "trial":
+            _, b, p, c, l = op
+            db.record_trial(BPS[b], POINTS[p], COSTS[c], LAYERS[l])
+        elif kind == "best":
+            _, b, p, c, l = op
+            db.record_best(BPS[b], POINTS[p], COSTS[c], LAYERS[l])
+        elif kind == "obs":
+            _, b, p, c = op
+            db.record_runtime_observation(BPS[b], POINTS[p], COSTS[c])
+        else:
+            _, b, k = op
+            db.record_event(BPS[b], k)
+    return db
+
+
+def canon(db: TuningDB) -> str:
+    return json.dumps(db._data, sort_keys=True, default=str)
+
+
+def copy_of(db: TuningDB) -> TuningDB:
+    """An independent deep copy (merge mutates the receiver)."""
+    out = TuningDB()
+    out._data = json.loads(json.dumps(db._data, default=str))
+    return out
+
+
+dbs = st.lists(op_strategy, max_size=12).map(build_db)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=dbs, b=dbs)
+def test_merge_commutative(a, b):
+    ab = copy_of(a).merge(copy_of(b))
+    ba = copy_of(b).merge(copy_of(a))
+    assert canon(ab) == canon(ba)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=dbs, b=dbs, c=dbs)
+def test_merge_associative(a, b, c):
+    left = copy_of(a).merge(copy_of(b).merge(copy_of(c)))
+    right = copy_of(a).merge(copy_of(b)).merge(copy_of(c))
+    assert canon(left) == canon(right)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=dbs)
+def test_merge_idempotent(a):
+    """merge(A, A) is A up to canonical log order (a merged DB is a
+    canonical form: its telemetry logs are deterministically sorted)."""
+    normalized = TuningDB().merge(copy_of(a))
+    merged = copy_of(a).merge(copy_of(a))
+    assert canon(merged) == canon(normalized)
+    # and a second self-merge is a strict fixpoint
+    assert canon(copy_of(merged).merge(copy_of(merged))) == canon(merged)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=dbs, b=dbs)
+def test_merge_absorbs_remerge(a, b):
+    """Re-delivering a scratch DB after the barrier (a periodic sync racing
+    the final merge) must be a no-op."""
+    merged = copy_of(a).merge(copy_of(b))
+    again = copy_of(merged).merge(copy_of(b)).merge(copy_of(a))
+    assert canon(again) == canon(merged)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=dbs, b=dbs)
+def test_merge_preserves_final_bests(a, b):
+    """No merge order may lose a completed search: if either side has a
+    final best for an entry, the merged DB has a final best for it."""
+    merged = copy_of(a).merge(copy_of(b))
+    for db in (a, b):
+        for bp in BPS:
+            if db.tuned_point(bp) is not None:
+                assert merged.tuned_point(bp) is not None

@@ -1,0 +1,475 @@
+"""Fleet tuning control plane tests (ISSUE 5, docs/fleet.md).
+
+Covers: DeviceFingerprint BP composition + device-scoped recall on
+AutotunedOp, ParamSpace.shard partition invariants, the fleet-equivalence
+acceptance bar (N-worker sharded search == single-process exhaustive for
+any N and shard policy, merged DB independent of merge order), the spawn
+backend, FleetSearch through Tuner and BackgroundTuner, and the full drift
+lifecycle (injected regression -> demote -> background re-tune -> canary ->
+promote / rollback, every transition in the persisted event log).
+"""
+import json
+import time
+
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property sections skip, unit tests still run
+    given = None
+
+from repro.core import (
+    ATRegion,
+    AutotunedOp,
+    BasicParams,
+    KernelSpec,
+    ParamSpace,
+    PerfParam,
+    Tuner,
+    TuningDB,
+    pp_key,
+)
+from repro.fleet import (
+    DeviceFingerprint,
+    DriftMonitor,
+    FleetCoordinator,
+    device_bp_entries,
+    local_device,
+)
+from repro.fleet.workloads import demo_cost, demo_space
+from repro.runtime import BackgroundTuner
+
+X = jnp.ones((4,))
+
+
+def _toy_spec(costs, name="fleet_toy", calls=None):
+    """A kernel with len(costs) candidates and controllable measured costs.
+
+    ``costs`` may be mutated by the test to inject a runtime regression.
+    """
+    def make_region(bp):
+        return ATRegion(
+            name,
+            ParamSpace([PerfParam("i", tuple(range(len(costs))))]),
+            instantiate=lambda pt: (lambda x: x + pt["i"]),
+        )
+
+    def cost_factory(region, bp, args, kwargs):
+        def cost(point):
+            if calls is not None:
+                calls.append(dict(point))
+            return costs[point["i"]]
+
+        return cost
+
+    return KernelSpec(
+        name=name,
+        make_region=make_region,
+        shape_class=lambda x: BasicParams.make(kernel=name, n=int(x.shape[0])),
+        cost_factory=cost_factory,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def test_device_fingerprint_roundtrip_and_label():
+    df = DeviceFingerprint(
+        backend="tpu", platform="TPU v5e", device_count=4,
+        host_cores=8, memory_gib=16, schema=2,
+    )
+    entries = df.bp_entries()
+    assert set(entries) == set(DeviceFingerprint.BP_KEYS)
+    assert DeviceFingerprint.from_bp_entries(entries) == df
+    assert df.label == "tpu/TPU_v5ex4/c8/m16g/v2"
+
+
+def test_local_device_detected_once_and_composes():
+    a, b = local_device(), local_device()
+    assert a is b  # cached per process
+    bp = BasicParams.make(kernel="k").with_entries(**device_bp_entries())
+    assert bp["device_backend"] == a.backend
+    # composing twice is idempotent (same fingerprint)
+    again = bp.with_entries(**device_bp_entries())
+    assert again.fingerprint() == bp.fingerprint()
+
+
+def test_device_key_namespaces_the_db():
+    """The same call tunes under different fingerprints with/without
+    device_key, and a device-keyed DB answers the devices() query."""
+    costs = [3.0, 1.0, 2.0]
+    db = TuningDB()
+    plain = AutotunedOp(_toy_spec(costs), db=db, warm=False, device_key=False)
+    keyed = AutotunedOp(_toy_spec(costs), db=db, warm=False, device_key=True)
+    s_plain, s_keyed = plain.resolve(X), keyed.resolve(X)
+    assert s_plain.bp.fingerprint() != s_keyed.bp.fingerprint()
+    assert s_keyed.bp["device_backend"] == local_device().backend
+    assert [d.label for d in db.devices()] == [local_device().label]
+    # both recall their own final with zero evaluations in a fresh op
+    for op_kwargs, bp in ((dict(device_key=False), s_plain.bp),
+                          (dict(device_key=True), s_keyed.bp)):
+        fresh = AutotunedOp(_toy_spec(costs), db=db, warm=False, **op_kwargs)
+        st2 = fresh.resolve(X)
+        assert st2.from_cache and st2.cost_evaluations == 0
+        assert st2.bp.fingerprint() == bp.fingerprint()
+
+
+def test_foreign_device_final_not_recalled_but_warm_starts():
+    """A final tuned on a *different* device must not be adopted verbatim;
+    it is still reachable as a nearest-device warm-start seed."""
+    costs = [3.0, 1.0, 2.0]
+    db = TuningDB()
+    foreign = DeviceFingerprint(
+        backend="tpu", platform="TPU v5e", device_count=8,
+        host_cores=64, memory_gib=128, schema=2,
+    )
+    foreign_bp = BasicParams.make(kernel="fleet_toy", n=4).with_entries(
+        **device_bp_entries(foreign)
+    )
+    db.record_best(foreign_bp, {"i": 2}, 0.5, "before_execution")
+
+    calls = []
+    op = AutotunedOp(_toy_spec(costs, calls=calls), db=db, warm=False,
+                     device_key=True)
+    state = op.resolve(X)
+    # not adopted verbatim: this device measured its own candidates
+    assert state.from_cache is False and state.cost_evaluations > 0
+    assert state.region.selected == {"i": 1}  # the local argmin
+    # ...but the foreign final seeded the search (warm start)
+    assert state.warm_seed == {"i": 2}
+    near = db.nearest_tuned(state.bp)
+    assert near is not None and near["point"] == {"i": 2}
+    assert near["distance"] > 0  # device mismatch costs distance
+
+
+# ---------------------------------------------------------------------------
+# Shard protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["stride", "block"])
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 50])
+def test_shard_partitions_every_point_exactly_once(policy, n):
+    space = ParamSpace(
+        [PerfParam("a", tuple(range(5))), PerfParam("b", tuple(range(3)))],
+        constraint=lambda p: (p["a"] + p["b"]) % 4 != 0,
+    )
+    all_keys = sorted(pp_key(p) for p in space.points())
+    shards = space.shard(n, policy)
+    assert 1 <= len(shards) <= n
+    sharded = sorted(
+        pp_key(p) for shard in shards for p in shard.points()
+    )
+    assert sharded == all_keys  # a partition: no loss, no duplication
+
+
+def test_shard_rejects_bad_inputs():
+    space = ParamSpace([PerfParam("a", (1, 2))])
+    with pytest.raises(ValueError, match="shard count"):
+        space.shard(0)
+    with pytest.raises(ValueError, match="policy"):
+        space.shard(2, "roundrobin")
+
+
+# ---------------------------------------------------------------------------
+# Fleet equivalence (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+if given is not None:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        costs=st.lists(
+            st.floats(min_value=0.01, max_value=100, allow_nan=False),
+            min_size=2, max_size=18, unique=True,
+        ),
+        workers=st.integers(1, 6),
+        policy=st.sampled_from(["stride", "block"]),
+        sync_every=st.sampled_from([0, 1, 3]),
+    )
+    def test_fleet_winner_equals_single_process_winner(
+        costs, workers, policy, sync_every
+    ):
+        """For a deterministic cost, the N-worker sharded search returns the
+        single-process exhaustive winner for ANY N and shard policy."""
+        space = ParamSpace([PerfParam("i", tuple(range(len(costs))))])
+        cost = lambda p: costs[p["i"]]  # noqa: E731
+        bp = BasicParams.make(kernel="eq")
+        fleet = FleetCoordinator(
+            workers=workers, shard_policy=policy, sync_every=sync_every
+        ).search(space, cost, bp=bp)
+        expected = min(range(len(costs)), key=costs.__getitem__)
+        assert fleet.best.point == {"i": expected}
+        assert fleet.best.cost == costs[expected]
+        # every candidate measured exactly once across the fleet
+        assert fleet.evaluations == len(costs)
+        assert fleet.merged.tuned_point(bp) == {"i": expected}
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        costs=st.lists(
+            st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+            min_size=3, max_size=12,
+        ),
+        split=st.integers(1, 5),
+    )
+    def test_merged_db_identical_regardless_of_merge_order(costs, split):
+        """The merge barrier is order-independent: merging worker scratch
+        DBs in any order yields byte-identical state."""
+        bp = BasicParams.make(kernel="order")
+        scratches = []
+        for w in range(min(split, len(costs))):
+            scratch = TuningDB()
+            for i in list(range(len(costs)))[w::split]:
+                scratch.record_trial(bp, {"i": i}, costs[i], "before_execution")
+            scratches.append(scratch)
+
+        def merged(order):
+            db = TuningDB()
+            for idx in order:
+                db.merge(scratches[idx])
+            return json.dumps(db._data, sort_keys=True, default=str)
+
+        forward = merged(range(len(scratches)))
+        backward = merged(reversed(range(len(scratches))))
+        assert forward == backward
+
+
+def test_fleet_balances_shards():
+    space = demo_space()  # 18 points
+    fleet = FleetCoordinator(workers=3).search(
+        space, demo_cost, bp=BasicParams.make(kernel="bal")
+    )
+    sizes = [w.points for w in fleet.workers]
+    assert sum(sizes) == space.size()
+    assert max(sizes) - min(sizes) <= 1  # stride deals evenly
+
+
+def test_fleet_spawn_backend_matches_thread(tmp_path):
+    """The multiprocessing path: same winner, same trial set, scratch DBs
+    persisted per worker (the sync_every flush)."""
+    bp = BasicParams.make(kernel="spawn_eq")
+    space = demo_space()
+    thread = FleetCoordinator(workers=2, backend="thread").search(
+        space, demo_cost, bp=bp
+    )
+    spawn = FleetCoordinator(
+        workers=2, backend="spawn", sync_every=4,
+        scratch_dir=str(tmp_path),
+    ).search(space, demo_cost, bp=bp)
+    assert spawn.best.point == thread.best.point
+    assert spawn.merged.trials(bp) == thread.merged.trials(bp)
+    for w in spawn.workers:
+        scratch = TuningDB(w.scratch_path)
+        assert scratch.trials(bp)  # worker flushed its scratch results
+
+
+def test_fleet_search_through_tuner():
+    """coordinator.as_search() drops into the Tuner: same argmin, trials
+    cached in the Tuner's DB, final best recorded."""
+    costs = {0: 5.0, 1: 1.0, 2: 3.0}
+    space = ParamSpace([PerfParam("i", (0, 1, 2))])
+    region = ATRegion("r", space, instantiate=lambda pt: (lambda: pt["i"]))
+    db = TuningDB()
+    bp = BasicParams.make(kernel="via_tuner")
+    tuner = Tuner(db, search=FleetCoordinator(workers=2).as_search())
+    result = tuner.tune(region, bp, lambda p: costs[p["i"]])
+    assert result.best.point == {"i": 1}
+    assert db.tuned_point(bp) == {"i": 1}
+    assert len(db.trials(bp)) == 3
+    assert region.selected == {"i": 1}
+
+
+def test_background_tuner_fleet_sharded():
+    """BackgroundTuner(fleet=...) shards the off-hot-path search and the
+    hot path still pays zero evaluations."""
+    costs = [4.0, 1.0, 3.0, 2.0]
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    with BackgroundTuner(fleet=FleetCoordinator(workers=2)) as tuner:
+        state = tuner.submit(op, X)
+        assert state.cost_evaluations == 0  # caller thread never tunes
+        assert tuner.drain(timeout=60)
+    assert state.region.selected == {"i": 1}
+    assert db.tuned_point(state.bp) == {"i": 1}
+    assert tuner.tuned_labels == ["fleet_toy"]
+
+
+# ---------------------------------------------------------------------------
+# Drift lifecycle (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+def _drifted(op, state, monitor, cost):
+    """Feed observations until the monitor demotes (bounded)."""
+    for _ in range(32):
+        if monitor.observe(op, state, cost, (X,), {}) == "demoted":
+            return True
+    return False
+
+
+def test_drift_lifecycle_promotes_winning_challenger():
+    """Injected regression -> demote -> re-tune -> canary -> promote,
+    every transition in the persisted event log."""
+    costs = {0: 1.0, 1: 0.5, 2: 2.0}
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    state = op.resolve(X)
+    assert db.tuned_point(state.bp) == {"i": 1}
+
+    monitor = DriftMonitor(factor=2.0, min_observations=4, canary_window=3)
+    # the runtime regresses the winner; candidate 0 is now fastest
+    costs.update({1: 2.0, 0: 0.3})
+    assert _drifted(op, state, monitor, 2.0)
+    # demotion is durable: the final flag is gone, the record remains
+    assert db.tuned_point(state.bp) is None
+    assert db.best_point(state.bp) is not None
+    # inline re-tune already canaried the challenger provisionally
+    assert state.region.selected == {"i": 0}
+    assert db.tuned_point(state.bp) is None  # not final until the verdict
+
+    outcomes = [monitor.observe(op, state, 0.3, (X,), {}) for _ in range(3)]
+    assert outcomes[-1] == "promoted"
+    assert state.region.selected == {"i": 0}
+    assert db.tuned_point(state.bp) == {"i": 0}  # the new final
+    assert db.best_cost(state.bp) == pytest.approx(0.3)
+    kinds = [e["kind"] for e in db.events(state.bp)]
+    assert kinds == ["demoted", "retune_scheduled", "canary_start", "promoted"]
+
+
+def test_drift_lifecycle_rolls_back_losing_challenger():
+    costs = {0: 1.0, 1: 0.5, 2: 2.0}
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    state = op.resolve(X)
+
+    monitor = DriftMonitor(factor=2.0, min_observations=4, canary_window=3)
+    costs.update({1: 2.0, 0: 0.3})  # re-tune will nominate 0...
+    assert _drifted(op, state, monitor, 2.0)
+    assert state.region.selected == {"i": 0}  # canary running
+    # ...but live canary observations are WORSE than the drifted incumbent
+    outcomes = [monitor.observe(op, state, 9.0, (X,), {}) for _ in range(3)]
+    assert outcomes[-1] == "rolled_back"
+    assert state.region.selected == {"i": 1}  # incumbent restored
+    # incumbent re-finalized at its *observed* cost so the watch re-arms
+    assert db.tuned_point(state.bp) == {"i": 1}
+    assert db.best_cost(state.bp) == pytest.approx(2.0)
+    kinds = [e["kind"] for e in db.events(state.bp)]
+    assert kinds == ["demoted", "retune_scheduled", "canary_start",
+                     "rolled_back"]
+    # re-armed, not flapping: normal observations trigger nothing
+    for _ in range(8):
+        assert monitor.observe(op, state, 2.0, (X,), {}) is None
+
+
+def test_drift_retune_remeasures_instead_of_replaying_cache():
+    """The re-tune must be fresh: recorded trial costs are what reality
+    drifted away from, so every candidate is measured again."""
+    costs = {0: 1.0, 1: 0.5, 2: 2.0}
+    calls = []
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs, calls=calls), db=db, warm=False)
+    state = op.resolve(X)
+    first_sweep = len(calls)
+    assert first_sweep == 3
+    monitor = DriftMonitor(factor=2.0, min_observations=4, canary_window=2)
+    costs.update({1: 2.0, 0: 0.3})
+    assert _drifted(op, state, monitor, 2.0)
+    # all three candidates re-measured (a cached replay would add zero)
+    assert len(calls) == 2 * first_sweep
+
+
+def test_drift_events_persist_across_processes(tmp_path):
+    """The event log is part of the DB file: a fresh load replays it."""
+    path = str(tmp_path / "db.json")
+    costs = {0: 1.0, 1: 0.5}
+    db = TuningDB(path)
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    state = op.resolve(X)
+    monitor = DriftMonitor(factor=2.0, min_observations=2, canary_window=2)
+    costs.update({1: 3.0, 0: 0.2})
+    assert _drifted(op, state, monitor, 3.0)
+    for _ in range(2):
+        monitor.observe(op, state, 0.2, (X,), {})
+    loaded = TuningDB(path)
+    kinds = [e["kind"] for e in loaded.events(state.bp)]
+    assert kinds == ["demoted", "retune_scheduled", "canary_start", "promoted"]
+    assert loaded.tuned_point(state.bp) == {"i": 0}
+
+
+def test_demotion_survives_flush_reconciliation(tmp_path):
+    """A stale on-disk final of the SAME point must not resurrect the
+    final flag when the demoting process flushes."""
+    path = str(tmp_path / "db.json")
+    bp = BasicParams.make(kernel="k")
+    writer = TuningDB(path)
+    writer.record_best(bp, {"i": 0}, 1.0, "before_execution")
+    demoter = TuningDB(path)  # loaded the final
+    writer.record_trial(bp, {"i": 0}, 1.0, "before_execution")  # disk changes
+    assert demoter.demote_best(bp)
+    demoter.record_event(bp, "demoted")  # forces a flush + reconcile
+    assert TuningDB(path).tuned_point(bp) is None
+
+
+def test_drift_through_background_tuner():
+    """The off-hot-path re-tune: demotion schedules the search on the
+    worker thread, the canary hot-applies from its completion callback."""
+    costs = {0: 1.0, 1: 0.5, 2: 2.0}
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    state = op.resolve(X)
+    with BackgroundTuner() as tuner:
+        monitor = DriftMonitor(
+            background=tuner, factor=2.0, min_observations=4, canary_window=2
+        )
+        costs.update({1: 2.0, 0: 0.3})
+        assert _drifted(op, state, monitor, 2.0)
+        # the re-tune runs on the worker; wait for the canary to go live
+        deadline = time.time() + 30
+        while monitor.watch_phase(state) != "canary":
+            assert time.time() < deadline, "background re-tune never landed"
+            time.sleep(0.01)
+        assert state.region.selected == {"i": 0}
+        outcomes = [monitor.observe(op, state, 0.3, (X,), {}) for _ in range(2)]
+    assert outcomes[-1] == "promoted"
+    assert db.tuned_point(state.bp) == {"i": 0}
+    kinds = [e["kind"] for e in db.events(state.bp)]
+    assert kinds == ["demoted", "retune_scheduled", "canary_start", "promoted"]
+    assert not tuner.errors
+
+
+def test_drift_rearm_when_retune_already_inflight():
+    """If the class is already queued on the worker (two monitors racing on
+    one DB), the dropped re-tune must re-arm the watch, not wedge it in
+    'retuning' forever."""
+    costs = {0: 1.0, 1: 0.5}
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    state = op.resolve(X)
+    tuner = BackgroundTuner().start()
+    with tuner._cv:  # simulate the racer: fingerprint already inflight
+        tuner._inflight.add(state.bp.fingerprint())
+    try:
+        monitor = DriftMonitor(
+            background=tuner, factor=2.0, min_observations=2, canary_window=2
+        )
+        costs.update({1: 3.0})
+        assert _drifted(op, state, monitor, 3.0)
+        assert monitor.watch_phase(state) == "healthy"  # re-armed, not stuck
+        kinds = [e["kind"] for e in db.events(state.bp)]
+        assert kinds == ["demoted", "retune_scheduled", "retune_failed"]
+    finally:
+        with tuner._cv:
+            tuner._inflight.discard(state.bp.fingerprint())
+        tuner.stop()
+
+
+def test_drift_monitor_validates_config():
+    with pytest.raises(ValueError, match="factor"):
+        DriftMonitor(factor=1.0)
+    with pytest.raises(ValueError, match="alpha"):
+        DriftMonitor(alpha=0.0)

@@ -1,0 +1,94 @@
+"""Smoke coverage for scripts/gen_experiments_tables.py (ISSUE 5 satellite).
+
+The table generator had zero test coverage: a schema drift in
+results/*.jsonl (or in the configs it enriches rows with) would only
+surface when someone regenerated EXPERIMENTS.md tables by hand.  This runs
+the script against a canned results directory and checks the emitted
+markdown tables actually parse.
+"""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(ROOT, "scripts", "gen_experiments_tables.py")
+
+
+def _canned_row(arch="tinyllama-1.1b", shape="train_4k", **extra):
+    row = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape,
+        "mesh": "data2xmodel2",
+        "chips": 4,
+        "roofline": {
+            "hlo_flops": 1.2e15,
+            "compute_s": 1.0e-2,
+            "memory_s": 2.0e-2,
+            "collective_s": 5.0e-3,
+            "total_s": 3.5e-2,
+            "bottleneck": "memory",
+        },
+        "memory": {"per_device_total": 6 * 2**30},
+    }
+    row.update(extra)
+    return row
+
+
+def _write_jsonl(path, rows):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+
+
+def _table_rows(stdout):
+    """All markdown table lines, grouped as (header, rows) sanity pairs."""
+    return [l for l in stdout.splitlines() if l.startswith("|")]
+
+
+def test_gen_tables_smoke(tmp_path):
+    results = tmp_path / "results"
+    _write_jsonl(
+        str(results / "dryrun_baseline.jsonl"),
+        [
+            _canned_row(),
+            _canned_row(shape="prefill_32k"),
+            {"status": "oom", "arch": "tinyllama-1.1b", "shape": "long_500k"},
+        ],
+    )
+    _write_jsonl(
+        str(results / "hillclimb.jsonl"),
+        [_canned_row(label="cell1/step0", rule="tp", n_micro=2)],
+    )
+    proc = subprocess.run(
+        [sys.executable, SCRIPT], cwd=str(tmp_path),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "§Roofline" in proc.stdout
+    assert "§Perf" in proc.stdout  # the hillclimb section rendered too
+
+    lines = _table_rows(proc.stdout)
+    # 2 tables x (header + separator) + 2 baseline rows + 1 hillclimb row
+    assert len(lines) == 7, proc.stdout
+    for header in (l for i, l in enumerate(lines) if "---" in lines[min(i + 1, len(lines) - 1)]):
+        width = header.count("|")
+        assert width >= 3
+    # every data row has the same column count as its table header
+    widths = [l.count("|") for l in lines]
+    assert widths[0] == widths[1] == widths[2] == widths[3]  # baseline table
+    assert widths[4] == widths[5] == widths[6]               # hillclimb table
+    # the failed cell is excluded from the table, not rendered as garbage
+    assert "long_500k" not in "".join(lines)
+
+
+def test_gen_tables_empty_results_ok(tmp_path):
+    """No results at all still renders the (empty) baseline section."""
+    proc = subprocess.run(
+        [sys.executable, SCRIPT], cwd=str(tmp_path),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "§Roofline" in proc.stdout
