@@ -26,6 +26,7 @@ def main() -> None:
         bench_fig13_14_combined,
         bench_fleet_tune,
         bench_roofline,
+        bench_serve_stream,
         bench_serve_traffic,
         bench_train_step,
         bench_tune_throughput,
@@ -39,6 +40,7 @@ def main() -> None:
         bench_fig13_14_combined,
         bench_roofline,
         bench_serve_traffic,
+        bench_serve_stream,
         bench_tune_throughput,
         bench_fleet_tune,
         bench_train_step,

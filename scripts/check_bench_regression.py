@@ -18,6 +18,11 @@ checks three gates against ``benchmarks/baselines/``:
   (``serve_traffic_background_*`` rows) must report ``hot_evals=0`` in
   every phase and at least ``min_tuned_classes`` classes tuned off the
   hot path;
+* **serve_stream.json** — continuous batching (``serve_stream/summary``)
+  must beat the static fixed-batch server on both p99 TTFT and total
+  tok/s under the bursty open-loop trace (a back-to-back comparison on
+  one process and virtual clock), with ``hot_evals=0`` and at least
+  ``min_tuned_sched_classes`` scheduler classes tuned off the hot path;
 * **fleet_tune.json** — the sharded fleet search (``fleet_tune/summary``)
   must report identical winners to single-process on every kernel, full
   space coverage, and balanced shards; the wall-clock speedup ratio is
@@ -177,6 +182,48 @@ def check_serve_traffic(record: dict, problems: list) -> str:
     return f"serve_traffic: {tuned} classes tuned, hot path clean"
 
 
+def check_serve_stream(record: dict, problems: list) -> str:
+    with open(BASELINES / "serve_stream.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "serve_stream/summary")
+    if fields is None:
+        problems.append("serve_stream: no serve_stream/summary row in record")
+        return "serve_stream: missing"
+    if baseline.get("require_hot_evals_zero", True) and fields.get(
+        "hot_evals"
+    ) != "0":
+        problems.append(
+            "serve_stream: engine paid hot-path cost evaluations "
+            f"(hot_evals={fields.get('hot_evals')})"
+        )
+    if baseline.get("require_engine_beats_static_p99", True) and fields.get(
+        "engine_beats_static_p99"
+    ) != "1":
+        problems.append(
+            "serve_stream: engine p99 TTFT did not beat the static server "
+            f"(ratio {fields.get('p99_ratio')})"
+        )
+    if baseline.get("require_engine_beats_static_tok", True) and fields.get(
+        "engine_beats_static_tok"
+    ) != "1":
+        problems.append(
+            "serve_stream: engine tok/s did not beat the static server "
+            f"(ratio {fields.get('tok_ratio')})"
+        )
+    sched = int(fields.get("tuned_sched", 0))
+    floor = int(baseline.get("min_tuned_sched_classes", 1))
+    if sched < floor:
+        problems.append(
+            f"serve_stream: only {sched} scheduler class(es) tuned off the "
+            f"hot path (need >= {floor})"
+        )
+    return (
+        f"serve_stream: {fields.get('p99_ratio')}x p99 TTFT / "
+        f"{fields.get('tok_ratio')}x tok/s over static, "
+        f"{sched} scheduler classes tuned"
+    )
+
+
 def check_fleet_tune(record: dict, problems: list) -> str:
     with open(BASELINES / "fleet_tune.json") as f:
         baseline = json.load(f)
@@ -228,6 +275,7 @@ def main() -> int:
         check_train_step(record, problems),
         check_dispatch(record, problems),
         check_serve_traffic(record, problems),
+        check_serve_stream(record, problems),
         check_fleet_tune(record, problems),
     ]
 

@@ -25,7 +25,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Dict
 
-PHASES = ("prefill", "decode")
+# "stream" is the scheduler's own phase: the continuous-batching engine
+# (repro.runtime.engine) classifies *queue states* rather than single calls —
+# batch bucket = waiting requests, seq bucket = mean prompt length.
+PHASES = ("prefill", "decode", "stream")
 
 
 def bucket_pow2(n: int, floor: int = 1) -> int:

@@ -1,6 +1,7 @@
 from .pipeline import (
     SyntheticLMDataset,
     ServingRequest,
+    bursty_open_loop_trace,
     mixed_traffic_trace,
     synthetic_requests,
 )
@@ -8,6 +9,7 @@ from .pipeline import (
 __all__ = [
     "SyntheticLMDataset",
     "ServingRequest",
+    "bursty_open_loop_trace",
     "mixed_traffic_trace",
     "synthetic_requests",
 ]

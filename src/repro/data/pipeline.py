@@ -106,6 +106,9 @@ class ServingRequest:
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
+    # open-loop arrival offset in (virtual) seconds since trace start; 0 for
+    # the closed-loop traces, so every pre-stream consumer is unaffected.
+    arrival_s: float = 0.0
 
 
 def synthetic_requests(
@@ -153,7 +156,46 @@ def mixed_traffic_trace(
             int(rng.integers(0, len(_TRACE_MODES)))
         ]
         plen = max(1, int(rng.integers(p_lo, p_hi + 1) * scale))
+        if cfg.family == "vlm":
+            # vision embeds replace the first n_vision_tokens slots of the
+            # prompt; shorter prompts would be all-vision (degenerate)
+            plen = max(plen, cfg.n_vision_tokens + 1)
         new = max(1, int(rng.integers(t_lo, t_hi + 1) * scale))
         prompt = rng.integers(0, cfg.vocab_size - 1, size=plen).astype(np.int32)
         out.append(ServingRequest(rid=i, prompt=prompt, max_new_tokens=new))
     return out
+
+
+def bursty_open_loop_trace(
+    cfg: ModelConfig,
+    n: int,
+    seed: int = 0,
+    scale: float = 1.0,
+    burst_size: int = 4,
+    burst_gap_s: float = 0.05,
+    jitter_s: float = 0.005,
+) -> List[ServingRequest]:
+    """An open-loop arrival trace: bursts of requests separated by quiet gaps.
+
+    The request mix is exactly :func:`mixed_traffic_trace` (same seed, same
+    prompts and lengths) with arrival timestamps layered on top: requests
+    land in bursts of ``burst_size`` (all members of a burst arrive within
+    ``jitter_s`` of the burst start), and consecutive bursts are
+    ``burst_gap_s`` apart.  Open loop means arrivals do not wait for the
+    server — a slow scheduler sees the queue build up, which is what the
+    time-to-first-token percentiles in bench_serve_stream measure.
+
+    Fully deterministic in ``(seed, n, scale, burst_size, burst_gap_s,
+    jitter_s)``: replayable across processes for tuning and benchmarking.
+    """
+    if burst_size < 1:
+        raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+    reqs = mixed_traffic_trace(cfg, n, seed=seed, scale=scale)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xB125_7]))
+    for i, r in enumerate(reqs):
+        burst = i // burst_size
+        r.arrival_s = burst * burst_gap_s + float(rng.uniform(0.0, jitter_s))
+    # within-burst jitter may reorder neighbours; keep the list sorted by
+    # arrival so replay loops can admit with a simple cursor
+    reqs.sort(key=lambda r: (r.arrival_s, r.rid))
+    return reqs

@@ -7,6 +7,12 @@ traffic-class autotuner (docs/serving.md): unseen classes tune on the
 background worker while the hot path serves the precompiled default, then
 hot-swap to the tuned winner.  ``--inline-tune`` instead tunes on the hot
 path (the latency-comparison baseline); the default performs no tuning.
+
+``--stream`` swaps the static batch Server for the continuous-batching
+:class:`~repro.runtime.engine.StreamingEngine`: an open-loop bursty arrival
+trace feeds an admission queue, the iteration-level scheduler interleaves
+prefill and decode over a paged KV cache, and the report adds TTFT
+percentiles (the metric static batching loses under bursty load).
 """
 import argparse
 
@@ -23,8 +29,34 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
-        "--trace", choices=("uniform", "mixed"), default="uniform",
-        help="uniform: identical requests; mixed: prefill/decode-heavy mix",
+        "--trace", choices=("uniform", "mixed", "bursty"), default="uniform",
+        help="uniform: identical requests; mixed: prefill/decode-heavy mix; "
+             "bursty: the mixed mix with open-loop burst arrivals "
+             "(--stream's default)",
+    )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="serve with the continuous-batching StreamingEngine "
+             "(admission queue + paged KV cache + tuned scheduler knobs) "
+             "instead of the static-batch Server",
+    )
+    ap.add_argument(
+        "--blocks", type=int, default=8,
+        help="paged KV cache pool size (stream mode): max concurrent "
+             "in-flight requests",
+    )
+    ap.add_argument(
+        "--max-len", type=int, default=None,
+        help="per-request KV capacity (stream mode); default: sized to the "
+             "longest prompt+completion in the trace",
+    )
+    ap.add_argument(
+        "--burst-size", type=int, default=4,
+        help="requests per arrival burst (bursty trace)",
+    )
+    ap.add_argument(
+        "--burst-gap", type=float, default=0.05,
+        help="virtual seconds between bursts (bursty trace)",
     )
     tune_mode = ap.add_mutually_exclusive_group()
     tune_mode.add_argument(
@@ -68,19 +100,36 @@ def main() -> None:
     if args.fleet_workers and not args.background_tune:
         ap.error("--fleet-workers requires --background-tune "
                  "(there is no background search to shard without it)")
+    if args.stream:
+        if args.trace == "uniform":
+            args.trace = "bursty"
+        if args.joint_tune:
+            ap.error("--joint-tune is a static-Server mode (the engine "
+                     "tunes its scheduler knobs per traffic class instead)")
+        if args.drift_factor:
+            ap.error("--drift-factor is a static-Server mode")
 
     import jax
 
     from repro.configs import get_config
     from repro.core import TuningDB
-    from repro.data import mixed_traffic_trace, synthetic_requests
+    from repro.data import (
+        bursty_open_loop_trace, mixed_traffic_trace, synthetic_requests,
+    )
     from repro.fleet import DriftMonitor, FleetCoordinator
     from repro.models import init_params, param_specs
-    from repro.runtime import BackgroundTuner, Server
+    from repro.runtime import BackgroundTuner, Server, StreamingEngine
 
     cfg = get_config(args.arch, smoke=not args.full)
     params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
-    if args.trace == "mixed":
+    if args.trace == "bursty":
+        # smoke configs get a scaled-down trace: full-length decodes dominate
+        # a CI smoke run without exercising anything extra
+        requests = bursty_open_loop_trace(
+            cfg, args.requests, scale=1.0 if args.full else 0.25,
+            burst_size=args.burst_size, burst_gap_s=args.burst_gap,
+        )
+    elif args.trace == "mixed":
         requests = mixed_traffic_trace(cfg, args.requests)
     else:
         requests = synthetic_requests(
@@ -92,6 +141,51 @@ def main() -> None:
         if args.fleet_workers else None
     )
     tuner = BackgroundTuner(fleet=fleet) if args.background_tune else None
+
+    if args.stream:
+        max_len = args.max_len or max(
+            len(r.prompt) + r.max_new_tokens for r in requests
+        )
+        engine = StreamingEngine(
+            cfg,
+            params,
+            n_blocks=args.blocks,
+            max_len=max_len,
+            tuning_db=TuningDB(args.tuning_db) if args.tuning_db else None,
+            background_tuner=tuner,
+            inline_tune=args.inline_tune,
+            device_key=args.device_key,
+        )
+        out = engine.serve(requests)
+        s = engine.stats
+        print(
+            f"served {len(out)} requests, {s.tokens_out} tokens, "
+            f"{s.tok_per_s:.1f} tok/s "
+            f"({s.prefill_steps} prefill / {s.decode_steps} decode steps, "
+            f"peak in-flight {s.peak_in_flight})"
+        )
+        print(
+            f"ttft p50 {s.ttft_percentile(50) * 1e3:.1f} ms, "
+            f"p99 {s.ttft_percentile(99) * 1e3:.1f} ms"
+        )
+        print(f"traffic classes: {', '.join(engine.traffic_classes_seen) or '-'}")
+        print(f"hot-path tuning evaluations: {engine.hot_path_cost_evaluations}")
+        if tuner is not None:
+            drained = tuner.drain(timeout=300)
+            tuner.stop()
+            print(
+                f"background-tuned classes: "
+                f"{', '.join(tuner.tuned_labels) or '-'} "
+                f"({tuner.background_evaluations} evaluations off the hot path)"
+            )
+            sched = engine.tuned_scheduler_classes
+            print(f"tuned scheduler classes: {', '.join(sched) or '-'}")
+            if not drained:
+                print("WARNING: background tuning did not drain within 300s")
+            for label, err in tuner.errors:
+                print(f"WARNING: background tuning failed for {label}: {err!r}")
+        return
+
     drift = (
         DriftMonitor(background=tuner, factor=args.drift_factor)
         if args.drift_factor else None

@@ -176,15 +176,20 @@ def _ce(logits: jnp.ndarray, targets: jnp.ndarray, mask: Optional[jnp.ndarray]):
     return jnp.mean(nll)
 
 
-def prefill_fn(params, batch, cfg: ModelConfig):
+def prefill_fn(params, batch, cfg: ModelConfig, capacity: Optional[int] = None):
+    """Prefill; ``capacity`` (>= prompt len) sizes the returned KV cache so a
+    request can decode in place without a cache reallocation."""
     if cfg.is_encoder_decoder:
-        return encdec.prefill(params, batch["frames"], batch["tokens"], cfg)
+        return encdec.prefill(
+            params, batch["frames"], batch["tokens"], cfg, capacity=capacity
+        )
     return transformer.prefill(
         params,
         batch["tokens"],
         cfg,
         positions=batch.get("positions"),
         vision_embeds=batch.get("vision_embeds"),
+        capacity=capacity,
     )
 
 

@@ -425,6 +425,17 @@ def prefill(
     return logits, cache
 
 
+def _conv_tail(xs_raw: jnp.ndarray, K: int) -> jnp.ndarray:
+    """Last K-1 pre-conv inputs as the decode conv state, zero-left-padded
+    when the prompt is shorter than K-1 (the causal conv's implicit zeros);
+    without the pad a short prefill hands decode a truncated window."""
+    tail = xs_raw[:, max(0, xs_raw.shape[1] - (K - 1)):, :]
+    short = (K - 1) - tail.shape[1]
+    if short > 0:
+        tail = jnp.pad(tail, ((0, 0), (short, 0), (0, 0)))
+    return tail.astype(jnp.bfloat16)
+
+
 def _pad_cap(k: jnp.ndarray, cap: int) -> jnp.ndarray:
     S = k.shape[1]
     if S == cap:
@@ -466,8 +477,7 @@ def _ssm_block_with_state(x, p, cfg):
     y = ys.transpose(1, 0, 2) + xs * p["D"]
     y = y * jax.nn.silu(z)
     out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
-    # conv state: last K-1 *pre-conv* inputs
-    conv_state = xs_raw[:, -(K - 1) :, :].astype(jnp.bfloat16)
+    conv_state = _conv_tail(xs_raw, K)
     return out, {"conv": conv_state, "h": h_final}
 
 
@@ -551,7 +561,7 @@ def _rglru_block_with_state(x, p, cfg):
     )
     y = hs.transpose(1, 0, 2) * gate
     out = jnp.einsum("bsw,wd->bsd", y, p["out"])
-    conv_state = xs_raw[:, -(K - 1) :, :].astype(jnp.bfloat16)
+    conv_state = _conv_tail(xs_raw, K)
     return out, {"conv": conv_state, "h": h_final}
 
 

@@ -1,5 +1,6 @@
 from .train import TrainLoopConfig, Trainer, SimulatedFailure
 from .serve import Server, ServeStats
+from .engine import BlockAllocator, PagedKVCache, StreamStats, StreamingEngine
 from .background_tuner import BackgroundTuner
 
 __all__ = [
@@ -8,5 +9,9 @@ __all__ = [
     "SimulatedFailure",
     "Server",
     "ServeStats",
+    "BlockAllocator",
+    "PagedKVCache",
+    "StreamStats",
+    "StreamingEngine",
     "BackgroundTuner",
 ]

@@ -70,12 +70,20 @@ class BackgroundTuner:
     supervised by the run-time layer rather than trusted blindly.
     """
 
+    # the stop() sentinel must drain after every queued job regardless of
+    # its priority, so it carries a key below any real submission
+    _SENTINEL_KEY = 1 << 30
+
     def __init__(
         self, name: str = "repro-background-tuner", fleet: Optional[Any] = None
     ) -> None:
         self.name = name
         self.fleet = fleet
-        self._queue: "queue.Queue[Optional[TuneJob]]" = queue.Queue()
+        # (-priority, seq, job): higher priority pops first, FIFO within a
+        # priority level.  seq breaks ties before the (unorderable) job.
+        self._queue: "queue.PriorityQueue[Tuple[int, int, Optional[TuneJob]]]" \
+            = queue.PriorityQueue()
+        self._seq = 0
         self._cv = threading.Condition()
         self._inflight: set = set()  # BP fingerprints queued or tuning now
         self._failed: Dict[str, str] = {}  # fp -> label, search raised
@@ -98,7 +106,7 @@ class BackgroundTuner:
         with self._cv:
             thread = self._thread
         if thread is not None and thread.is_alive():
-            self._queue.put(None)
+            self._put(None, self._SENTINEL_KEY)
             thread.join(timeout)
             if thread.is_alive():
                 # still draining a long tune: keep the handle so a later
@@ -107,6 +115,12 @@ class BackgroundTuner:
         with self._cv:
             if self._thread is thread:
                 self._thread = None
+
+    def _put(self, job: Optional[TuneJob], key: int) -> None:
+        with self._cv:
+            self._seq += 1
+            seq = self._seq
+        self._queue.put((key, seq, job))
 
     def __enter__(self) -> "BackgroundTuner":
         return self.start()
@@ -121,6 +135,7 @@ class BackgroundTuner:
         op: AutotunedOp,
         *args: Any,
         on_complete: Optional[Callable[[OpState], None]] = None,
+        priority: int = 0,
         **kwargs: Any,
     ) -> OpState:
         """Resolve the call's shape class without tuning; queue tuning if new.
@@ -131,6 +146,11 @@ class BackgroundTuner:
         flag (``resolve_deferred`` never tunes).  A class whose search raised
         is not retried — it keeps serving the default and stays listed in
         :attr:`errors` / :attr:`failed_labels` for the operator.
+
+        ``priority``: higher pops sooner (FIFO within a level).  The
+        streaming engine submits scheduler-knob classes above kernel
+        classes — a tuned scheduler reshapes every later batch, so it
+        should win the queue.
         """
         self.start()
         state = op.resolve_deferred(*args, **kwargs)
@@ -142,7 +162,8 @@ class BackgroundTuner:
                 return state
             self._inflight.add(fp)
         label = state.traffic.label if state.traffic else op.spec.name
-        self._queue.put(TuneJob(op, state, args, kwargs, label, on_complete))
+        self._put(TuneJob(op, state, args, kwargs, label, on_complete),
+                  -priority)
         return state
 
     def submit_retune(
@@ -170,10 +191,10 @@ class BackgroundTuner:
             self._failed.pop(fp, None)
             self._inflight.add(fp)
         label = state.traffic.label if state.traffic else op.spec.name
-        self._queue.put(TuneJob(
+        self._put(TuneJob(
             op, state, args, dict(kwargs or {}), label,
             retune=True, on_winner=on_winner,
-        ))
+        ), 0)
         return True
 
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -219,7 +240,7 @@ class BackgroundTuner:
 
     def _worker(self) -> None:
         while True:
-            job = self._queue.get()
+            _, _, job = self._queue.get()
             if job is None:
                 return
             fp = job.state.bp.fingerprint()

@@ -60,6 +60,11 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
+    # invocations of the underlying jitted prefill/decode callables (a
+    # degree-d chunked candidate counts d) — the regression tests' witness
+    # that the loop runs exactly the decodes it needs, no trailing waste
+    prefill_calls: int = 0
+    decode_calls: int = 0
     batch_latencies: List[float] = field(default_factory=list)
 
     @property
@@ -81,6 +86,11 @@ _BATCH_AXIS = {"tokens": 0, "vision_embeds": 0, "frames": 0, "positions": 1}
 
 
 def _slice_axis(x, axis: int, i: int, n: int):
+    if x.shape[axis] % n:
+        raise ValueError(
+            f"cannot split axis {axis} of shape {tuple(x.shape)} into {n} "
+            f"equal chunks ({x.shape[axis]} % {n} != 0)"
+        )
     size = x.shape[axis] // n
     idx = [slice(None)] * x.ndim
     idx[axis] = slice(i * size, (i + 1) * size)
@@ -105,6 +115,38 @@ def _cache_concat(chunks: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
         ax = cache_batch_axis(k, getattr(v, "ndim", 0))
         out[k] = v if ax is None else jnp.concatenate([c[k] for c in chunks], axis=ax)
     return out
+
+
+def check_unique_rids(requests: Sequence[ServingRequest]) -> None:
+    """Duplicate rids would silently overwrite each other in the rid-keyed
+    result dict; fail fast instead (shared by Server and StreamingEngine)."""
+    seen: set = set()
+    for r in requests:
+        if r.rid in seen:
+            raise ValueError(f"duplicate request rid {r.rid!r} in trace")
+        seen.add(r.rid)
+
+
+def build_batch_inputs(
+    cfg: ModelConfig, group: Sequence[ServingRequest], plen: int
+) -> Dict[str, Any]:
+    """Model inputs for one prefill group, prompts left-padded to ``plen``."""
+    B = len(group)
+    toks = np.zeros((B, plen), np.int32)
+    for i, r in enumerate(group):
+        toks[i, -len(r.prompt):] = r.prompt[:plen]
+    batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.zeros(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+        pos = jnp.broadcast_to(jnp.arange(plen, dtype=jnp.int32), (B, plen))
+        batch["positions"] = jnp.broadcast_to(pos, (3, B, plen))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.zeros(
+            (B, cfg.encoder_len, cfg.d_model), jnp.bfloat16
+        )
+    return batch
 
 
 class Server:
@@ -140,11 +182,31 @@ class Server:
         if self.drift is not None and self.drift.on_apply is None:
             self.drift.on_apply = self._on_tuned
         self.degree = DegreeController(max_degree=batch_size)
-        self._prefill = jax.jit(lambda p, b: prefill_fn(p, b, cfg))
-        self._decode = jax.jit(lambda p, b, c: decode_fn(p, b, c, cfg))
+        self.stats = ServeStats()
+        # count at the Python wrapper, not inside jit: traced code only runs
+        # at compile time, so an in-graph counter would freeze at 1.
+        # capacity=max_len gives decode real KV headroom: with the old
+        # default (capacity == prompt length) the cache was born full and
+        # every decode write clamped onto the last prompt slot.
+        raw_prefill = jax.jit(
+            lambda p, b: prefill_fn(
+                p, b, cfg, capacity=max(max_len, b["tokens"].shape[1])
+            )
+        )
+        raw_decode = jax.jit(lambda p, b, c: decode_fn(p, b, c, cfg))
+
+        def counted_prefill(p, b):
+            self.stats.prefill_calls += 1
+            return raw_prefill(p, b)
+
+        def counted_decode(p, b, c):
+            self.stats.decode_calls += 1
+            return raw_decode(p, b, c)
+
+        self._prefill = counted_prefill
+        self._decode = counted_decode
         self.prefill_op = self._make_prefill_op()
         self.decode_op = self._make_decode_op()
-        self.stats = ServeStats()
         self._hot_tuned: set = set()  # fingerprints tuned inline on a serve call
         self.joint_result: Optional[ProgramResult] = None
 
@@ -421,28 +483,15 @@ class Server:
     # -- batching --------------------------------------------------------------
 
     def _batch_inputs(self, group: Sequence[ServingRequest], plen: int) -> Dict[str, Any]:
-        B = len(group)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(group):
-            toks[i, -len(r.prompt):] = r.prompt[:plen]
-        batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "vlm":
-            batch["vision_embeds"] = jnp.zeros(
-                (B, self.cfg.n_vision_tokens, self.cfg.d_model), jnp.bfloat16
-            )
-            pos = jnp.broadcast_to(jnp.arange(plen, dtype=jnp.int32), (B, plen))
-            batch["positions"] = jnp.broadcast_to(pos, (3, B, plen))
-        if self.cfg.is_encoder_decoder:
-            batch["frames"] = jnp.zeros(
-                (B, self.cfg.encoder_len, self.cfg.d_model), jnp.bfloat16
-            )
-        return batch
+        return build_batch_inputs(self.cfg, group, plen)
 
     def run(self, requests: Sequence[ServingRequest]) -> Dict[int, List[int]]:
         """Greedy-decode every request; returns rid -> generated token ids."""
+        check_unique_rids(requests)
         out: Dict[int, List[int]] = {}
         for i in range(0, len(requests), self.batch_size):
-            group = list(requests[i : i + self.batch_size])
+            real = list(requests[i : i + self.batch_size])
+            group = list(real)
             while len(group) < self.batch_size:  # pad the tail batch
                 group.append(group[-1])
             plen = max(len(r.prompt) for r in group)
@@ -476,42 +525,52 @@ class Server:
             n_steps = max(r.max_new_tokens for r in group)
             gen = [[] for _ in group]
             t0 = time.perf_counter()
+            # the prefill's argmax IS generated token #1: only n_steps - 1
+            # decode calls remain (the old loop ran n_steps and discarded
+            # the final decode's sample — one wasted full step per group)
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for gi in range(len(group)):
+                gen[gi].append(int(next_tok[gi]))
 
-            dbatch = self._decode_batch(next_tok, cache)
-            dstate = self._resolve(self.decode_op, self.params, dbatch, cache)
-            dlabel = dstate.traffic.label if dstate.traffic else "decode"
-            step_times: List[float] = []
-            # one set/restore per group, not per token: the label (and the
-            # executed candidate) is fixed for the whole decode loop
-            with self.degree.region(dlabel):
-                for step in range(n_steps):
-                    for gi in range(len(group)):
-                        gen[gi].append(int(next_tok[gi]))
-                    ts = time.perf_counter()
-                    logits, cache = dstate.region(self.params, dbatch, cache)
-                    logits.block_until_ready()
-                    step_times.append(time.perf_counter() - ts)
-                    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                    dbatch = self._decode_batch(next_tok, cache)
-            jax.block_until_ready(next_tok)
+            if n_steps > 1:
+                dbatch = self._decode_batch(next_tok, cache)
+                dstate = self._resolve(self.decode_op, self.params, dbatch, cache)
+                dlabel = dstate.traffic.label if dstate.traffic else "decode"
+                step_times: List[float] = []
+                # one set/restore per group, not per token: the label (and
+                # the executed candidate) is fixed for the whole decode loop
+                with self.degree.region(dlabel):
+                    for step in range(n_steps - 1):
+                        ts = time.perf_counter()
+                        logits, cache = dstate.region(self.params, dbatch, cache)
+                        logits.block_until_ready()
+                        step_times.append(time.perf_counter() - ts)
+                        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        for gi in range(len(group)):
+                            gen[gi].append(int(next_tok[gi]))
+                        dbatch = self._decode_batch(next_tok, cache)
+                jax.block_until_ready(next_tok)
+                if dstate.selector is not None and step_times:
+                    # the observation must be unit-compatible with the tuned
+                    # per-call trial cost: median of the *bare* region-call
+                    # times (the loop's per-token python overhead excluded),
+                    # one DB observation per group, never per token
+                    if dstate.selector.observe(float(np.median(step_times))):
+                        self._on_tuned(dstate)  # keep the controller in sync
+                if self.drift is not None and step_times:
+                    self.drift.observe(
+                        self.decode_op, dstate, float(np.median(step_times)),
+                        (self.params, dbatch, cache),
+                    )
             self.stats.decode_s += time.perf_counter() - t0
-            self.stats.tokens_out += n_steps * len(group)
-            if dstate.selector is not None and step_times:
-                # the observation must be unit-compatible with the tuned
-                # per-call trial cost: median of the *bare* region-call times
-                # (the loop's per-token python overhead excluded), one DB
-                # observation per group, never per token
-                if dstate.selector.observe(float(np.median(step_times))):
-                    self._on_tuned(dstate)  # keep the controller in sync
-            if self.drift is not None and step_times:
-                self.drift.observe(
-                    self.decode_op, dstate, float(np.median(step_times)),
-                    (self.params, dbatch, cache),
-                )
+            # only tokens delivered to real requests count: padded tail rows
+            # and steps past a request's own max_new_tokens are not output
+            self.stats.tokens_out += sum(
+                min(r.max_new_tokens, n_steps) for r in real
+            )
             self.stats.batch_latencies.append(time.perf_counter() - t_batch)
 
-            for gi, r in enumerate(group[: len(requests[i : i + self.batch_size])]):
+            for gi, r in enumerate(real):
                 out[r.rid] = gen[gi][: r.max_new_tokens]
         return out
 
