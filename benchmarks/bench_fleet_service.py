@@ -1,0 +1,164 @@
+"""Global tuning service benchmark: convergence under faults (docs/fleet.md).
+
+Runs the ISSUE 7 acceptance scenario deterministically in one process:
+
+1. a **single-process reference** exhaustive run over the demo space;
+2. a **2-host remote fleet** through one :class:`TuningService`, each host a
+   ``backend="remote"`` :class:`FleetCoordinator` on its own half of the
+   space, talking through a seeded
+   :class:`~repro.fleet.transport.FaultInjectionTransport` injecting
+   dropped requests/responses, duplicated and reordered deliveries — plus
+   one full partition/heal cycle on host 1.  All client backoff runs on a
+   :class:`VirtualClock`, so the bench takes no real wall time waiting;
+3. a **fresh host** (BackgroundTuner with a service client) seeing the same
+   traffic class: it must adopt the service's final with **zero** cost
+   evaluations (the hot-path invariant at fleet scope).
+
+Gates (all deterministic counts/flags, checked by
+``scripts/check_bench_regression.py`` against
+``benchmarks/baselines/fleet_service.json``):
+
+* ``entries_equal=1`` — the service's final-best entry is byte-identical
+  (point, cost, finality, layer) to the single-process run's;
+* ``winner_match=1`` — merged fleet winner == single-process winner;
+* ``hot_evals=0`` — the fresh host adopted without measuring;
+* ``faults >= min_faults`` — the lossy schedule actually exercised the
+  retry/join machinery (a quiet injector would gate nothing).
+
+Rows: ``fleet_service/host<i>`` per host (wall seconds, fault/retry
+counts) and the gated ``fleet_service/summary``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from .common import emit
+
+
+def run() -> None:
+    from repro.core import BasicParams, TuningDB
+    from repro.fleet import (
+        FaultInjectionTransport,
+        FleetCoordinator,
+        InProcessTransport,
+        ServiceClient,
+        TuningService,
+        VirtualClock,
+    )
+    from repro.fleet.workloads import demo_cost, demo_space
+    from repro.runtime import BackgroundTuner
+
+    space = demo_space()
+    bp = BasicParams.make(kernel="bench_fleet_service")
+
+    # 1. single-process reference
+    single = FleetCoordinator(workers=1).search(space, demo_cost, bp=bp)
+
+    # 2. two hosts through one service over a deliberately lossy link
+    service = TuningService()
+    injectors, clients = [], []
+    synced = 0
+    for host in range(2):
+        clock = VirtualClock()
+        ft = FaultInjectionTransport(
+            InProcessTransport(service), seed=7 + host,
+            drop_request=0.2, drop_response=0.2, duplicate=0.2, reorder=0.1,
+        )
+        client = ServiceClient(ft, retries=6, jitter_seed=host,
+                               sleep=clock.sleep, now=clock.now)
+        injectors.append(ft)
+        clients.append(client)
+        if host == 1:  # one full partition/heal cycle mid-run
+            ft.partition()
+            client.try_push(TuningDB())  # rejected: the host rides it out
+            ft.heal()
+        t0 = time.perf_counter()
+        fleet = FleetCoordinator(
+            workers=2, backend="remote", service=client,
+            hosts=2, host_index=host, sync_every=2,
+        ).search(space, demo_cost, bp=bp)
+        wall = time.perf_counter() - t0
+        synced += int(bool(fleet.service_synced))
+        s = ft.stats
+        emit(
+            f"fleet_service/host{host}", wall,
+            f"evals={fleet.evaluations};synced={int(bool(fleet.service_synced))};"
+            f"faults={s.faults};retries={client.stats.retries};"
+            f"backoff_s={sum(clock.sleeps):.3f}",
+        )
+
+    # identical final-best entries vs the single-process run
+    fp = bp.fingerprint()
+    svc_best = service.db._data.get(fp, {}).get("best")
+    ref_best = single.merged._data.get(fp, {}).get("best")
+    entries_equal = int(
+        json.dumps(svc_best, sort_keys=True, default=str)
+        == json.dumps(ref_best, sort_keys=True, default=str)
+    )
+    winner_match = int(
+        service.db.tuned_point(bp) == single.best.point
+        and service.db.best_cost(bp) == single.best.cost
+        and service.db.trials(bp) == single.merged.trials(bp)
+    )
+
+    # 3. a fresh host's BackgroundTuner adopts the final with ZERO cost
+    # evaluations: the counting cost callable must never fire
+    from repro.core import ATRegion, AutotunedOp, KernelSpec
+
+    hot_evals = 0
+
+    def counting_cost_factory(region, _bp, args, kwargs):
+        def cost(point):
+            nonlocal hot_evals
+            hot_evals += 1
+            return demo_cost(point)
+
+        return cost
+
+    spec = KernelSpec(
+        name="bench_fleet_service",
+        make_region=lambda _bp: ATRegion(
+            "svc_bench", space, instantiate=lambda pt: (lambda: pt)
+        ),
+        shape_class=lambda: bp,  # the exact class the fleet just tuned
+        cost_factory=counting_cost_factory,
+    )
+    fresh_db = TuningDB()
+    op = AutotunedOp(spec, db=fresh_db, warm=False)
+    adopt_client = ServiceClient(InProcessTransport(service))
+    with BackgroundTuner(service=adopt_client) as tuner:
+        state = tuner.submit(op)
+        tuner.drain(timeout=60)
+    adopted = int(
+        fresh_db.tuned_point(bp) == single.best.point
+        and state.region.selected == single.best.point
+        and len(tuner.pulled_labels) == 1
+    )
+
+    drops = sum(i.stats.dropped_requests + i.stats.dropped_responses
+                for i in injectors)
+    dups = sum(i.stats.duplicated for i in injectors)
+    reorders = sum(i.stats.reordered for i in injectors)
+    partitions = sum(i.stats.partitions for i in injectors)
+    healed = sum(i.stats.heals for i in injectors)
+    retries = sum(c.stats.retries for c in clients)
+    faults = sum(i.stats.faults for i in injectors)
+
+    emit(
+        "fleet_service/summary", 0.0,
+        f"entries_equal={entries_equal};winner_match={winner_match};"
+        f"adopted={adopted};hot_evals={hot_evals};hosts_synced={synced};"
+        f"faults={faults};drops={drops};dups={dups};reorders={reorders};"
+        f"partitions={partitions};healed={healed};retries={retries}",
+    )
+    if not (entries_equal and winner_match):
+        raise AssertionError(
+            "fleet service convergence violated: service final-best != "
+            f"single-process (entries_equal={entries_equal}, "
+            f"winner_match={winner_match})"
+        )
+
+
+if __name__ == "__main__":
+    run()

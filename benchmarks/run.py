@@ -24,6 +24,7 @@ def main() -> None:
         bench_fig11_loop_exchange,
         bench_fig12_degree_switch,
         bench_fig13_14_combined,
+        bench_fleet_service,
         bench_fleet_tune,
         bench_roofline,
         bench_serve_stream,
@@ -43,6 +44,7 @@ def main() -> None:
         bench_serve_stream,
         bench_tune_throughput,
         bench_fleet_tune,
+        bench_fleet_service,
         bench_train_step,
         bench_dispatch,
     ):

@@ -27,7 +27,13 @@ checks three gates against ``benchmarks/baselines/``:
   must report identical winners to single-process on every kernel, full
   space coverage, and balanced shards; the wall-clock speedup ratio is
   gated (``min_speedup_full``) only on full (non ``BENCH_FAST``) records,
-  where the timing is meaningful.
+  where the timing is meaningful;
+* **fleet_service.json** — the global tuning service
+  (``fleet_service/summary``): the 2-host remote fleet over a seeded
+  lossy transport must converge to final-best entries byte-identical to
+  the single-process run, a fresh host must adopt the final with
+  ``hot_evals=0``, and the injected-fault schedule must be non-trivial
+  (``min_faults``/``min_partitions``/``min_healed``).
 
 Every gated quantity is either a deterministic count/flag or a
 back-to-back ratio of like timings, so none of the gates flake on machine
@@ -256,6 +262,61 @@ def check_fleet_tune(record: dict, problems: list) -> str:
             f"{speedup:.2f}x with {fields.get('workers')} workers")
 
 
+def check_fleet_service(record: dict, problems: list) -> str:
+    with open(BASELINES / "fleet_service.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "fleet_service/summary")
+    if fields is None:
+        problems.append("fleet_service: no fleet_service/summary row in record")
+        return "fleet_service: missing"
+    if baseline.get("require_entries_equal", True) and fields.get(
+        "entries_equal"
+    ) != "1":
+        problems.append(
+            "fleet_service: service final-best entry != single-process entry "
+            "(the faulty-schedule convergence gate)"
+        )
+    if baseline.get("require_winner_match", True) and fields.get(
+        "winner_match"
+    ) != "1":
+        problems.append(
+            "fleet_service: fleet winner through the service != "
+            "single-process winner"
+        )
+    if baseline.get("require_adopted", True) and fields.get("adopted") != "1":
+        problems.append(
+            "fleet_service: fresh host failed to adopt the service final"
+        )
+    if baseline.get("require_hot_evals_zero", True) and fields.get(
+        "hot_evals"
+    ) != "0":
+        problems.append(
+            "fleet_service: pull adoption paid cost evaluations "
+            f"(hot_evals={fields.get('hot_evals')})"
+        )
+    synced = int(fields.get("hosts_synced", 0))
+    if synced < int(baseline.get("min_hosts_synced", 2)):
+        problems.append(
+            f"fleet_service: only {synced} host(s) reconciled with the "
+            f"service (need >= {baseline.get('min_hosts_synced', 2)})"
+        )
+    for key, floor_key in (("faults", "min_faults"),
+                           ("partitions", "min_partitions"),
+                           ("healed", "min_healed")):
+        got = int(fields.get(key, 0))
+        floor = int(baseline.get(floor_key, 1))
+        if got < floor:
+            problems.append(
+                f"fleet_service: {key}={got} — the fault schedule went "
+                f"quiet (need >= {floor}); the convergence gate proved "
+                "nothing"
+            )
+    return (f"fleet_service: converged under {fields.get('faults')} faults "
+            f"({fields.get('drops')} drops/{fields.get('dups')} dups/"
+            f"{fields.get('reorders')} reorders), "
+            f"{fields.get('retries')} retries, hot path clean")
+
+
 def main() -> int:
     bench_path = Path(
         sys.argv[1] if len(sys.argv) > 1
@@ -277,6 +338,7 @@ def main() -> int:
         check_serve_traffic(record, problems),
         check_serve_stream(record, problems),
         check_fleet_tune(record, problems),
+        check_fleet_service(record, problems),
     ]
 
     for p in problems:

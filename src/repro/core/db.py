@@ -103,6 +103,26 @@ class TuningDB:
             _merge_entries(self._data, entries)
         return self
 
+    def export_entries(
+        self, fingerprints: Optional[list] = None
+    ) -> Dict[str, Dict[str, Any]]:
+        """A deep, JSON-safe copy of (some) entries — the service wire form.
+
+        This is what a fleet host *pushes* to the global tuning service
+        (docs/fleet.md): the snapshot round-trips through ``json`` exactly
+        like the on-disk format, and feeding it to :meth:`merge` on any
+        receiver is the idempotent lattice join — safe to retry, duplicate,
+        or reorder in flight.
+        """
+        with self._lock:
+            keys = self._data.keys() if fingerprints is None else [
+                fp for fp in fingerprints if fp in self._data
+            ]
+            return {
+                fp: json.loads(json.dumps(self._data[fp], default=str))
+                for fp in keys
+            }
+
     # -- write ---------------------------------------------------------------
 
     def record_trial(
@@ -189,8 +209,18 @@ class TuningDB:
         simply demotes again (docs/fleet.md).  Returns True when a final
         best was actually demoted.
         """
+        return self.demote_fingerprint(bp.fingerprint())
+
+    def demote_fingerprint(self, fingerprint: str) -> bool:
+        """:meth:`demote_best` addressed by raw DB fingerprint.
+
+        The global tuning service and the anti-entropy sync loop
+        (docs/fleet.md) propagate demotions as fingerprints — the receiver
+        may never have constructed the BasicParams object, only merged the
+        entry — so demotion must work from the key alone.
+        """
         with self._lock:
-            entry = self._data.get(bp.fingerprint())
+            entry = self._data.get(fingerprint)
             best = entry.get("best") if entry else None
             if not best or not best.get("final"):
                 return False
@@ -298,6 +328,7 @@ class TuningDB:
                         "cost": float(rec["cost"]),
                         "bp": echo,
                         "distance": d,
+                        "fingerprint": fp,
                     }
         return best
 

@@ -14,7 +14,16 @@ search/DB machinery:
 * :class:`~repro.fleet.drift.DriftMonitor` — EWMA drift watch over the
   dispatch fast path's run-time trickle: demote a drifted final, re-tune
   off the hot path, canary the challenger, promote or roll back — every
-  transition persisted in the DB's tuning-event log.
+  transition persisted in the DB's tuning-event log;
+* :class:`~repro.fleet.service.TuningService` /
+  :class:`~repro.fleet.service.ServiceClient` /
+  :class:`~repro.fleet.service.AntiEntropySync` — the global tuning
+  service: hosts push scratch DBs and pull device-matched finals over any
+  :class:`~repro.fleet.transport.Transport` (in-process, stdlib HTTP, or
+  the deterministic :class:`~repro.fleet.transport.FaultInjectionTransport`
+  test seam), with bounded-backoff retries, local-only degradation under
+  partition, and an anti-entropy loop that carries drift re-tune requests
+  fleet-wide.
 """
 from .coordinator import (
     BACKENDS,
@@ -26,16 +35,46 @@ from .coordinator import (
 )
 from .drift import DriftMonitor
 from .fingerprint import DeviceFingerprint, device_bp_entries, local_device
+from .service import (
+    AntiEntropySync,
+    ClientStats,
+    ServiceClient,
+    ServiceUnavailable,
+    TuningService,
+    serve_http,
+)
+from .transport import (
+    FaultInjectionTransport,
+    FaultStats,
+    HTTPTransport,
+    InProcessTransport,
+    Transport,
+    TransportError,
+    VirtualClock,
+)
 
 __all__ = [
     "BACKENDS",
     "SHARD_POLICIES",
+    "AntiEntropySync",
+    "ClientStats",
     "DeviceFingerprint",
     "DriftMonitor",
+    "FaultInjectionTransport",
+    "FaultStats",
     "FleetCoordinator",
     "FleetResult",
     "FleetSearch",
+    "HTTPTransport",
+    "InProcessTransport",
+    "ServiceClient",
+    "ServiceUnavailable",
+    "Transport",
+    "TransportError",
+    "TuningService",
+    "VirtualClock",
     "WorkerReport",
     "device_bp_entries",
     "local_device",
+    "serve_http",
 ]

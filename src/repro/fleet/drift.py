@@ -144,6 +144,43 @@ class DriftMonitor:
             watch = self._watches.get(state.bp.fingerprint())
             return watch.phase if watch else "healthy"
 
+    def request_retune(
+        self,
+        op: AutotunedOp,
+        state: OpState,
+        args: tuple = (),
+        kwargs: Optional[dict] = None,
+        reason: str = "fleet",
+    ) -> bool:
+        """An externally requested demote → re-tune → canary (docs/fleet.md).
+
+        The anti-entropy sync loop calls this when the global tuning
+        service reports a fleet-wide re-tune request for a class this host
+        is live-serving: drift observed by *one* host re-tunes every host.
+        Unlike :meth:`observe` it does not wait for local evidence — the
+        service's word is the trigger — but the challenger still earns its
+        promotion through the normal canary window against this host's own
+        observations.  Returns False when the class is already mid-
+        lifecycle or has no recorded best to re-tune (the DB-side demotion
+        has already landed via merge in that case).
+        """
+        kwargs = kwargs or {}
+        with self._lock:
+            watch = self._watches.setdefault(state.bp.fingerprint(), _Watch())
+            if watch.phase != "healthy":
+                return False
+            recorded = op.db.best_cost(state.bp)
+            if recorded is None:
+                return False
+            if watch.ewma is None:
+                # no local observations yet: the recorded cost stands in as
+                # what the incumbent was delivering, so the canary verdict
+                # still has a bar to clear
+                watch.ewma = float(recorded)
+            self._demote(op, state, watch, float(recorded), args, kwargs,
+                         reason=reason)
+            return True
+
     # -- transitions -----------------------------------------------------------
 
     @staticmethod
@@ -161,6 +198,7 @@ class DriftMonitor:
         recorded: float,
         args: tuple,
         kwargs: dict,
+        reason: str = "drift",
     ) -> str:
         """Caller holds the lock."""
         op.db.demote_best(state.bp)
@@ -169,7 +207,8 @@ class DriftMonitor:
         watch.phase = "retuning"
         self._log(op, state, "demoted",
                   observed=float(watch.ewma), recorded=float(recorded),
-                  factor=self.factor, point=dict(state.region.selected))
+                  factor=self.factor, reason=reason,
+                  point=dict(state.region.selected))
         mode = "background" if self.background is not None else "inline"
         self._log(op, state, "retune_scheduled", mode=mode)
         if self.background is not None:

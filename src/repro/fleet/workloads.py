@@ -12,13 +12,21 @@ Two kinds of search problem the fleet CLI / benchmarks / CI smoke drive:
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 import time
 from typing import Any, Callable, Dict, Mapping, Tuple
 
 from repro.core.params import ParamSpace, PerfParam
 
 KERNELS = ("exb", "flash_attention", "rglru_scan", "ssm_scan", "stress")
+
+# crashing_demo_cost control (set by crash-resume tests / the CI smoke):
+# the JSON point whose first evaluation kills the worker process, and the
+# marker file that makes the kill one-shot (so the resumed run completes).
+CRASH_POINT_ENV = "REPRO_FLEET_CRASH_POINT"
+CRASH_ONCE_ENV = "REPRO_FLEET_CRASH_ONCE"
 
 DEMO_VARIANT_PENALTY = {"ij": 0.00, "ji": 0.07, "fused": 0.21}
 
@@ -40,6 +48,28 @@ def demo_cost(point: Mapping[str, Any]) -> float:
         abs(math.log2(int(point["block"]) / 64.0))
         + DEMO_VARIANT_PENALTY[str(point["variant"])]
     )
+
+
+def crashing_demo_cost(point: Mapping[str, Any]) -> float:
+    """``demo_cost`` with an env-driven one-shot worker kill (test seam).
+
+    Module-level and picklable like :func:`demo_cost`, so it crosses the
+    spawn boundary.  When ``REPRO_FLEET_CRASH_POINT`` holds a JSON point
+    and ``REPRO_FLEET_CRASH_ONCE`` a marker-file path, the *first*
+    evaluation of that point touches the marker and hard-kills the worker
+    process (``os._exit`` — no cleanup, no excepthook, exactly what a
+    SIGKILL/OOM looks like to the coordinator).  Later evaluations see the
+    marker and behave normally, so crash-resume tests assert the second
+    attempt completes from the synced scratch state.
+    """
+    poison = os.environ.get(CRASH_POINT_ENV)
+    marker = os.environ.get(CRASH_ONCE_ENV)
+    if poison and marker and not os.path.exists(marker):
+        if json.loads(poison) == dict(point):
+            with open(marker, "w") as f:
+                f.write("crashed\n")
+            os._exit(1)
+    return demo_cost(point)
 
 
 def example_args(name: str) -> Tuple[Any, ...]:

@@ -13,9 +13,68 @@ spawn backend accepts: real-kernel costs close over device arrays); any
 registered kernel name runs wall-clock measured on the thread backend.
 ``--check-equivalence`` re-runs single-worker and verifies the winner
 matches — the CI smoke gate for the multiprocessing path.
+
+Global tuning service (docs/fleet.md):
+
+    # terminal 1 — the service, persisting to a DB file
+    PYTHONPATH=src python -m repro.launch.fleet --serve-db \
+        --db /tmp/service-db.json --port 8761
+
+    # terminals 2..N — one process per host, each measuring its slice
+    PYTHONPATH=src python -m repro.launch.fleet --kernel demo \
+        --backend spawn --service-url http://127.0.0.1:8761 \
+        --hosts 2 --host-index 0
+    PYTHONPATH=src python -m repro.launch.fleet --kernel demo \
+        --backend spawn --service-url http://127.0.0.1:8761 \
+        --hosts 2 --host-index 1 --check-equivalence
+
+``--serve-db`` runs the long-lived service; each host pushes its shard's
+trials and pulls everyone else's at the merge barrier, so the *last*
+host's recorded winner is the global single-process winner (what
+``--check-equivalence`` asserts in service mode).  ``--fault-seed`` /
+``--fault-drop`` / ``--fault-dup`` / ``--fault-reorder`` wrap the
+transport in the deterministic fault injector — the CI service smoke runs
+the whole flow over a deliberately lossy link to prove the lattice-join
+protocol converges anyway.
 """
 import argparse
 import json
+
+
+def serve(args: argparse.Namespace) -> None:
+    """``--serve-db``: run the global tuning service until interrupted."""
+    from repro.fleet import TuningService, serve_http
+
+    service = TuningService(path=args.db)
+    server = serve_http(service, host=args.host, port=args.port)
+    host, port = server.server_address[:2]
+    print(f"tuning service listening on http://{host}:{port} "
+          f"(db={args.db or '<memory>'}, "
+          f"{len(service.db.fingerprints())} entries)", flush=True)
+    try:
+        import threading
+
+        threading.Event().wait()  # serve_forever runs on a daemon thread
+    except KeyboardInterrupt:
+        server.shutdown()
+
+
+def make_client(args: argparse.Namespace):
+    """A ServiceClient over HTTP, optionally behind the fault injector."""
+    from repro.fleet import FaultInjectionTransport, HTTPTransport, ServiceClient
+
+    transport = HTTPTransport(args.service_url, timeout_s=args.timeout)
+    injector = None
+    if args.fault_seed is not None:
+        injector = FaultInjectionTransport(
+            transport, seed=args.fault_seed,
+            drop_request=args.fault_drop, drop_response=args.fault_drop,
+            duplicate=args.fault_dup, reorder=args.fault_reorder,
+        )
+        transport = injector
+    client = ServiceClient(transport, retries=args.retries,
+                           jitter_seed=args.host_index)
+    return client, injector
 
 
 def main() -> None:
@@ -26,7 +85,8 @@ def main() -> None:
     )
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--shard-policy", choices=("stride", "block"), default="stride")
-    ap.add_argument("--backend", choices=("thread", "spawn"), default="thread")
+    ap.add_argument("--backend", choices=("thread", "spawn", "remote"),
+                    default="thread")
     ap.add_argument(
         "--sync-every", type=int, default=8,
         help="trials between scratch-DB syncs (0 = merge barrier only)",
@@ -34,6 +94,8 @@ def main() -> None:
     ap.add_argument("--db", default=None, help="persistent TuningDB path")
     ap.add_argument("--scratch-dir", default=None,
                     help="directory for per-worker scratch DBs")
+    ap.add_argument("--keep-scratch", action="store_true",
+                    help="leave scratch files on disk after the barrier")
     ap.add_argument(
         "--no-device-key", action="store_true",
         help="do not namespace DB entries under the host DeviceFingerprint",
@@ -42,7 +104,36 @@ def main() -> None:
         "--check-equivalence", action="store_true",
         help="re-run with one worker and assert the same winner (CI smoke)",
     )
+    # -- global tuning service ------------------------------------------------
+    ap.add_argument("--serve-db", action="store_true",
+                    help="run the global tuning service (uses --db/--host/--port)")
+    ap.add_argument("--host", default="127.0.0.1", help="--serve-db bind host")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--serve-db bind port (0 = ephemeral)")
+    ap.add_argument("--service-url", default=None,
+                    help="global tuning service URL (http://host:port)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="total hosts sharing the space through the service")
+    ap.add_argument("--host-index", type=int, default=0,
+                    help="this host's slice index in [0, --hosts)")
+    ap.add_argument("--timeout", type=float, default=5.0,
+                    help="per-request service timeout (seconds)")
+    ap.add_argument("--retries", type=int, default=5,
+                    help="service retries per call (bounded backoff)")
+    # -- deterministic fault injection (the CI service smoke) -----------------
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="enable the fault injector with this RNG seed")
+    ap.add_argument("--fault-drop", type=float, default=0.0,
+                    help="per-call drop probability (requests and responses)")
+    ap.add_argument("--fault-dup", type=float, default=0.0,
+                    help="per-call duplicate-delivery probability")
+    ap.add_argument("--fault-reorder", type=float, default=0.0,
+                    help="per-call hold-and-replay (reorder) probability")
     args = ap.parse_args()
+
+    if args.serve_db:
+        serve(args)
+        return
 
     from repro.core import BasicParams, TuningDB
     from repro.fleet import FleetCoordinator, device_bp_entries, local_device
@@ -56,6 +147,12 @@ def main() -> None:
                      "(measured kernel costs close over device arrays)")
         _, space, cost = kernel_problem(args.kernel)
 
+    client, injector = (None, None)
+    if args.service_url:
+        client, injector = make_client(args)
+    elif args.backend == "remote":
+        ap.error("--backend remote requires --service-url")
+
     entries = {} if args.no_device_key else device_bp_entries()
     bp = BasicParams.make(kernel=f"fleet/{args.kernel}", **entries)
     db = TuningDB(args.db) if args.db else None
@@ -66,18 +163,39 @@ def main() -> None:
         backend=args.backend,
         sync_every=args.sync_every,
         scratch_dir=args.scratch_dir,
+        service=client,
+        hosts=args.hosts,
+        host_index=args.host_index,
+        keep_scratch=args.keep_scratch,
     )
     fleet = coordinator.search(space, cost, bp=bp, db=db)
 
     print(f"device: {'-' if args.no_device_key else local_device().label}")
     print(f"space: {space.size()} candidates, {len(fleet.workers)} workers "
           f"({args.backend}/{args.shard_policy}, sync_every={args.sync_every})")
+    if args.hosts > 1:
+        print(f"host {args.host_index}/{args.hosts}: this process measured "
+              f"its slice only; the service holds the union")
     for w in fleet.workers:
+        flags = "".join(
+            [" crashed" if w.crashed else "",
+             f" resumed={w.resumed}" if w.resumed else ""]
+        )
         print(f"  worker {w.worker}: {w.points} points, "
               f"{w.evaluations} evals, {w.wall_s * 1e3:.1f} ms, "
-              f"shard best {w.best_point} @ {w.best_cost:.3e}")
+              f"shard best {w.best_point} @ {w.best_cost:.3e}{flags}")
     print(f"fleet winner: {json.dumps(fleet.best.point, sort_keys=True)} "
           f"@ {fleet.best.cost:.3e} ({fleet.evaluations} total evaluations)")
+
+    if client is not None:
+        state = "synced" if fleet.service_synced else "DEGRADED (local-only)"
+        print(f"service: {state}; client attempts={client.stats.attempts} "
+              f"retries={client.stats.retries} failures={client.stats.failures}")
+        if injector is not None:
+            s = injector.stats
+            print(f"faults injected: drops={s.dropped_requests}+"
+                  f"{s.dropped_responses} dups={s.duplicated} "
+                  f"reorders={s.reordered} (delivered {s.delivered})")
 
     if args.check_equivalence:
         single = FleetCoordinator(
@@ -89,8 +207,8 @@ def main() -> None:
                 f"FLEET EQUIVALENCE VIOLATED: {args.workers}-worker winner "
                 f"{fleet.best.point} != single-process winner {single.best.point}"
             )
-        print(f"equivalence OK: {args.workers}-worker winner == "
-              "single-process winner")
+        scope = ("fleet-union" if args.hosts > 1 else f"{args.workers}-worker")
+        print(f"equivalence OK: {scope} winner == single-process winner")
 
     if args.db:
         print(f"tuning DB: {args.db} "

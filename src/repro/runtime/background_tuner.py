@@ -68,6 +68,18 @@ class BackgroundTuner:
     pays off for compile-dominated costs; concurrent *measured* timings
     on one device include cross-worker contention, so winners stay
     supervised by the run-time layer rather than trusted blindly.
+
+    ``service`` (optional, docs/fleet.md): a
+    :class:`~repro.fleet.ServiceClient` on the global tuning service.
+    Before searching, the worker asks the service: an exact
+    device-fingerprint **final** is adopted outright — merged into the
+    op's DB and hot-swapped in with *zero* cost evaluations
+    (:attr:`pulled_labels`); a **nearest** entry is merged so the op's
+    existing warm-start machinery seeds the (much shorter) refinement
+    run.  After a successful local search the winner is pushed back, so
+    the next host skips the search entirely.  All service traffic is
+    ``try_*`` best-effort — a dead or partitioned service degrades this
+    tuner to exactly its local-only behaviour.
     """
 
     # the stop() sentinel must drain after every queued job regardless of
@@ -75,10 +87,15 @@ class BackgroundTuner:
     _SENTINEL_KEY = 1 << 30
 
     def __init__(
-        self, name: str = "repro-background-tuner", fleet: Optional[Any] = None
+        self,
+        name: str = "repro-background-tuner",
+        fleet: Optional[Any] = None,
+        service: Optional[Any] = None,
     ) -> None:
         self.name = name
         self.fleet = fleet
+        self.service = service
+        self.pulled_labels: List[str] = []  # finals adopted from the service
         # (-priority, seq, job): higher priority pops first, FIFO within a
         # priority level.  seq breaks ties before the (unorderable) job.
         self._queue: "queue.PriorityQueue[Tuple[int, int, Optional[TuneJob]]]" \
@@ -247,11 +264,14 @@ class BackgroundTuner:
             try:
                 if job.retune:
                     self._run_retune(job)
+                elif self._adopt_from_service(job):
+                    pass  # the service's final landed; no search needed
                 else:
                     job.op.tune_state(
                         job.state, job.args, job.kwargs,
                         search=self._fleet_search(job),
                     )
+                    self._push_to_service(job, fp)
             except BaseException as e:  # a bad class must not kill the worker
                 self.errors.append((job.label, e))
                 with self._cv:  # never retried: submit() skips failed classes
@@ -275,6 +295,44 @@ class BackgroundTuner:
         if self.fleet is None:
             return None
         return self.fleet.as_search(bp=job.state.bp, db=job.op.db)
+
+    def _adopt_from_service(self, job: TuneJob) -> bool:
+        """Pull before tuning: adopt a device-matched final, seed from nearest.
+
+        Returns True when the service supplied an exact final — merged
+        into the op's DB and hot-swapped in with zero cost evaluations.
+        A ``nearest`` entry is merged (a warm-start seed for the search
+        this worker is about to run) and False returned; a degraded or
+        absent service is just False.
+        """
+        if self.service is None:
+            return False
+        state = job.state
+        resp = self.service.try_pull(state.bp)
+        if resp is None or resp.get("found") is None:
+            return False
+        job.op.db.merge({resp["fingerprint"]: resp["entry"]})
+        if resp["found"] != "final":
+            return False  # nearest: the merged entry seeds the warm start
+        tuned = job.op.db.tuned_point(state.bp)
+        if tuned is None:
+            return False  # raced a local demotion: search normally
+        # mirror _build_state's cache-hit path: select, mark, re-rank
+        state.region.select(tuned)
+        state.from_cache = True
+        from repro.core.tuner import RuntimeSelector
+
+        state.selector = RuntimeSelector(
+            state.region, state.bp, job.op.db,
+            tolerance=job.op.tolerance, window=job.op.window,
+        )
+        self.pulled_labels.append(job.label)
+        return True
+
+    def _push_to_service(self, job: TuneJob, fp: str) -> None:
+        """After a successful local search, publish the winner fleet-wide."""
+        if self.service is not None:
+            self.service.try_push(job.op.db, [fp])
 
     def _run_retune(self, job: TuneJob) -> None:
         winner: Optional[dict] = None

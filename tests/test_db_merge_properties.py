@@ -120,3 +120,79 @@ def test_merge_preserves_final_bests(a, b):
         for bp in BPS:
             if db.tuned_point(bp) is not None:
                 assert merged.tuned_point(bp) is not None
+
+
+# ---------------------------------------------------------------------------
+# Convergence through a faulty network (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    a=dbs, b=dbs,
+    seed=st.integers(0, 2 ** 16),
+    drop=st.sampled_from([0.0, 0.2, 0.5]),
+    dup=st.sampled_from([0.0, 0.3]),
+    reorder=st.sampled_from([0.0, 0.3]),
+    partition_host=st.sampled_from([None, 0, 1]),
+    rounds=st.integers(1, 3),
+)
+def test_lossy_push_schedule_converges_to_lossless_merge(
+    a, b, seed, drop, dup, reorder, partition_host, rounds
+):
+    """ANY seeded schedule of dropped / duplicated / reordered / retried
+    pushes from two hosts — plus an optional mid-run partition — followed
+    by a heal and lossless anti-entropy rounds, leaves the service and both
+    hosts byte-identical to one lossless ``merge(a).merge(b)``.
+
+    This is the property the whole remote protocol rests on: because every
+    delivery is a lattice join, the *schedule* (which requests arrive, how
+    many times, in what order) is irrelevant to the converged state.
+    """
+    from repro.fleet import (
+        FaultInjectionTransport,
+        InProcessTransport,
+        ServiceClient,
+        TuningService,
+        VirtualClock,
+    )
+
+    service = TuningService()
+    hosts = [copy_of(a), copy_of(b)]
+    injectors, clients = [], []
+    for i in range(2):
+        clock = VirtualClock()
+        ft = FaultInjectionTransport(
+            InProcessTransport(service), seed=seed + i,
+            drop_request=drop, drop_response=drop,
+            duplicate=dup, reorder=reorder,
+        )
+        injectors.append(ft)
+        clients.append(ServiceClient(
+            ft, retries=2, jitter_seed=i,
+            sleep=clock.sleep, now=clock.now,
+        ))
+
+    # the lossy phase: interleaved pushes, entry-at-a-time and whole-DB,
+    # with one host optionally partitioned for part of the schedule
+    if partition_host is not None:
+        injectors[partition_host].partition()
+    for _ in range(rounds):
+        for i, host_db in enumerate(hosts):
+            for fp in host_db.fingerprints():
+                clients[i].try_push(host_db, [fp])  # may drop/dup/reorder
+            clients[i].try_push(host_db)
+
+    # heal (replays anything held) + lossless anti-entropy rounds
+    for ft in injectors:
+        ft.heal()
+        ft.drop_request = ft.drop_response = 0.0
+        ft.duplicate = ft.reorder = 0.0
+    assert clients[0].sync(hosts[0])["ok"]
+    assert clients[1].sync(hosts[1])["ok"]
+    assert clients[0].sync(hosts[0])["ok"]  # A picks up B's entries
+
+    expected = canon(TuningDB().merge(copy_of(a)).merge(copy_of(b)))
+    assert canon(service.db) == expected
+    assert canon(hosts[0]) == expected
+    assert canon(hosts[1]) == expected

@@ -251,7 +251,8 @@ def test_fleet_balances_shards():
 
 def test_fleet_spawn_backend_matches_thread(tmp_path):
     """The multiprocessing path: same winner, same trial set, scratch DBs
-    persisted per worker (the sync_every flush)."""
+    persisted per worker (the sync_every flush; keep_scratch pins them
+    past the barrier's cleanup)."""
     bp = BasicParams.make(kernel="spawn_eq")
     space = demo_space()
     thread = FleetCoordinator(workers=2, backend="thread").search(
@@ -259,13 +260,99 @@ def test_fleet_spawn_backend_matches_thread(tmp_path):
     )
     spawn = FleetCoordinator(
         workers=2, backend="spawn", sync_every=4,
-        scratch_dir=str(tmp_path),
+        scratch_dir=str(tmp_path), keep_scratch=True,
     ).search(space, demo_cost, bp=bp)
     assert spawn.best.point == thread.best.point
     assert spawn.merged.trials(bp) == thread.merged.trials(bp)
     for w in spawn.workers:
+        assert not w.crashed and w.resumed == 0
         scratch = TuningDB(w.scratch_path)
         assert scratch.trials(bp)  # worker flushed its scratch results
+
+
+def test_fleet_cleans_up_scratch_files(tmp_path):
+    """A successful barrier removes this run's scratch files AND orphans
+    from a previous crashed run; keep_scratch pins everything."""
+    bp = BasicParams.make(kernel="cleanup")
+    space = demo_space()
+    orphan = tmp_path / "fleet_worker_9.json"
+    TuningDB(str(orphan)).record_trial(bp, {"block": 8, "variant": "ij"},
+                                       9.0, "before_execution")
+    assert orphan.exists()
+    FleetCoordinator(
+        workers=2, backend="spawn", sync_every=2, scratch_dir=str(tmp_path)
+    ).search(space, demo_cost, bp=bp)
+    assert list(tmp_path.glob("fleet_worker_*.json")) == []
+    # keep_scratch leaves the files for postmortem / resume
+    kept = FleetCoordinator(
+        workers=2, backend="spawn", sync_every=2,
+        scratch_dir=str(tmp_path), keep_scratch=True,
+    ).search(space, demo_cost, bp=bp)
+    assert sorted(p.name for p in tmp_path.glob("fleet_worker_*.json")) == [
+        "fleet_worker_0.json", "fleet_worker_1.json",
+    ]
+    assert kept.best.point == {"block": 64, "variant": "ij"}
+
+
+def test_fleet_spawn_crash_resume(tmp_path):
+    """Kill a spawn worker mid-shard: the barrier recovers every synced
+    trial from its scratch file, re-measures only the unsynced tail, and
+    the winner still equals the single-process winner."""
+    import os
+
+    from repro.fleet.workloads import (
+        CRASH_ONCE_ENV, CRASH_POINT_ENV, crashing_demo_cost,
+    )
+
+    bp = BasicParams.make(kernel="crash")
+    space = demo_space()
+    single = FleetCoordinator(workers=1).search(space, demo_cost, bp=bp)
+
+    # poison a point late in worker 0's stride shard so trials sync first
+    shard0 = [dict(p) for p in space.shard(2, "stride")[0].points()]
+    poison = shard0[-2]
+    marker = tmp_path / "crashed.marker"
+    os.environ[CRASH_POINT_ENV] = json.dumps(poison)
+    os.environ[CRASH_ONCE_ENV] = str(marker)
+    try:
+        fleet = FleetCoordinator(
+            workers=2, backend="spawn", sync_every=1,
+            scratch_dir=str(tmp_path), keep_scratch=True,
+        ).search(space, crashing_demo_cost, bp=bp)
+    finally:
+        os.environ.pop(CRASH_POINT_ENV, None)
+        os.environ.pop(CRASH_ONCE_ENV, None)
+
+    assert marker.exists()  # the kill actually fired
+    crashed = [w for w in fleet.workers if w.crashed]
+    assert crashed, "no worker reported the crash"
+    # every synced trial was recovered, not re-measured
+    assert all(w.resumed > 0 for w in crashed)
+    # completeness + equivalence: the barrier saw the whole space
+    assert fleet.merged.trials(bp).keys() == single.merged.trials(bp).keys()
+    assert fleet.best.point == single.best.point
+    assert fleet.merged.tuned_point(bp) == single.best.point
+
+
+def test_fleet_spawn_worker_resumes_from_scratch_file(tmp_path):
+    """A re-run over a surviving scratch file re-measures only the missing
+    points (the crash-resume path inside the worker itself)."""
+    from repro.fleet.coordinator import _spawn_worker
+
+    bp = BasicParams.make(kernel="resume")
+    points = [{"block": 2 ** (3 + i), "variant": "ij"} for i in range(4)]
+    scratch_path = str(tmp_path / "fleet_worker_0.json")
+    prior = TuningDB(scratch_path)
+    for p in points[:3]:
+        prior.record_trial(bp, p, demo_cost(p), "before_execution")
+
+    idx, trials, _, resumed = _spawn_worker(
+        (0, points, bp.asdict(), demo_cost, "before_execution",
+         scratch_path, 1)
+    )
+    assert resumed == 3
+    assert len(trials) == 4  # recovered 3 + measured 1
+    assert {pp_key(p) for p, _ in trials} == {pp_key(p) for p in points}
 
 
 def test_fleet_search_through_tuner():

@@ -1,0 +1,499 @@
+"""Global tuning service tests (ISSUE 7, docs/fleet.md).
+
+Covers: the ServiceClient's failure policy (timeout -> bounded-backoff
+retry sequencing on a virtual clock, no real sleeps anywhere), partition ->
+local-only degradation -> reconnect reconciliation, service restart
+resuming from its persisted DB, the lost-demotion race (concurrent final +
+demoted pushes for the same fingerprint must keep the demotion until a
+completed re-tune supersedes it), pull semantics (exact-fingerprint final /
+nearest-device warm seed / nothing), the remote FleetCoordinator backend
+under deterministic fault injection, BackgroundTuner pull-adoption with
+zero evaluations, AntiEntropySync re-tune propagation into the
+DriftMonitor lifecycle, and one end-to-end run over the real stdlib HTTP
+transport.
+"""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AutotunedOp, BasicParams, ParamSpace, PerfParam, TuningDB
+from repro.fleet import (
+    AntiEntropySync,
+    DriftMonitor,
+    FaultInjectionTransport,
+    FleetCoordinator,
+    HTTPTransport,
+    InProcessTransport,
+    ServiceClient,
+    ServiceUnavailable,
+    Transport,
+    TransportError,
+    TuningService,
+    VirtualClock,
+    serve_http,
+)
+from repro.fleet.workloads import demo_cost, demo_space
+from repro.runtime import BackgroundTuner
+
+from test_fleet import X, _toy_spec
+
+BP = BasicParams.make(kernel="svc", n=4)
+POINT = {"i": 1}
+
+
+def make_client(service, clock=None, **kw):
+    clock = clock or VirtualClock()
+    kw.setdefault("retries", 3)
+    client = ServiceClient(InProcessTransport(service),
+                          sleep=clock.sleep, now=clock.now, **kw)
+    return client, clock
+
+
+def db_with_final(cost=1.0, point=POINT, bp=BP):
+    db = TuningDB()
+    for i, c in enumerate([3.0, cost, 2.0]):
+        db.record_trial(bp, {"i": i}, c, "before_execution")
+    db.record_best(bp, point, cost, "before_execution")
+    return db
+
+
+class FlakyTransport(Transport):
+    """Fails the first ``failures`` calls, then delegates (scripted)."""
+
+    def __init__(self, inner, failures):
+        self.inner = inner
+        self.failures = failures
+        self.calls = 0
+
+    def request(self, op, payload):
+        self.calls += 1
+        if self.calls <= self.failures:
+            raise TransportError(f"{op}: scripted failure {self.calls}")
+        return self.inner.request(op, payload)
+
+
+# ---------------------------------------------------------------------------
+# Client failure policy: timeout -> backoff -> retry (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_schedule_is_bounded_exponential_with_jitter():
+    client, clock = make_client(TuningService(), retries=6,
+                                backoff_base=0.05, backoff_cap=0.4)
+    delays = [client.backoff_s(a) for a in range(7)]
+    for attempt, d in enumerate(delays):
+        base = min(0.4, 0.05 * 2 ** attempt)
+        assert 0.5 * base <= d <= 1.5 * base  # jitter factor in [0.5, 1.5)
+    # the cap actually binds: late attempts stop growing
+    assert all(d <= 0.4 * 1.5 for d in delays)
+    # seeded jitter is reproducible
+    again, _ = make_client(TuningService(), retries=6,
+                           backoff_base=0.05, backoff_cap=0.4)
+    assert [again.backoff_s(a) for a in range(7)] == delays
+
+
+def test_retry_sequencing_sleeps_between_attempts_then_succeeds():
+    """2 failures -> exactly 2 backoff sleeps at attempts 0 and 1, then
+    the call lands; all timing on the virtual clock."""
+    service = TuningService()
+    clock = VirtualClock()
+    flaky = FlakyTransport(InProcessTransport(service), failures=2)
+    client = ServiceClient(flaky, retries=3, jitter_seed=0,
+                           sleep=clock.sleep, now=clock.now)
+    expected = [client.backoff_s(0), client.backoff_s(1)]
+    # rebuild (backoff_s consumed jitter RNG state above)
+    client = ServiceClient(flaky, retries=3, jitter_seed=0,
+                           sleep=clock.sleep, now=clock.now)
+    resp = client.push(db_with_final())
+    assert resp["ok"] and flaky.calls == 3
+    assert clock.sleeps == pytest.approx(expected)
+    assert client.stats.retries == 2 and client.stats.failures == 0
+    assert client.available
+    assert service.db.tuned_point(BP) == POINT
+
+
+def test_exhausted_retries_degrade_then_any_success_reconnects():
+    service = TuningService()
+    clock = VirtualClock()
+    flaky = FlakyTransport(InProcessTransport(service), failures=10)
+    client = ServiceClient(flaky, retries=2, sleep=clock.sleep, now=clock.now)
+    with pytest.raises(ServiceUnavailable):
+        client.push(db_with_final())
+    assert not client.available
+    assert flaky.calls == 3  # 1 + 2 retries
+    assert len(clock.sleeps) == 2
+    # degraded: try_* are single-probe (no retry ladder, no sleeps)
+    assert client.try_push(db_with_final()) is False
+    assert flaky.calls == 4 and len(clock.sleeps) == 2
+    # the service comes back: the next probe reconnects
+    flaky.failures = 0
+    assert client.try_push(db_with_final()) is True
+    assert client.available and client.stats.reconnects == 1
+
+
+# ---------------------------------------------------------------------------
+# Partition -> local-only degradation -> heal -> reconciliation
+# ---------------------------------------------------------------------------
+
+
+def test_partition_degrades_to_local_only_then_heals_and_reconciles():
+    service = TuningService()
+    clock = VirtualClock()
+    ft = FaultInjectionTransport(InProcessTransport(service))
+    client = ServiceClient(ft, retries=2, sleep=clock.sleep, now=clock.now)
+    host_db = TuningDB()
+    sync = AntiEntropySync(client, host_db)
+
+    # healthy round first
+    assert sync.sync_once()["ok"]
+
+    ft.partition()
+    # the host keeps tuning locally while partitioned
+    host_db.record_trial(BP, POINT, 1.0, "before_execution")
+    host_db.record_best(BP, POINT, 1.0, "before_execution")
+    out = sync.sync_once()
+    assert out == {"ok": False, "degraded": True, "retunes": 0}
+    assert not client.available
+    assert service.db.tuned_point(BP) is None  # nothing crossed the wire
+    assert host_db.tuned_point(BP) == POINT    # local tuning unaffected
+
+    # meanwhile the other side of the partition made progress too
+    other = BasicParams.make(kernel="svc", n=8)
+    service.push(db_with_final(bp=other).export_entries())
+
+    ft.heal()
+    out = sync.sync_once()
+    assert out["ok"] and not out["degraded"]
+    assert client.available and client.stats.reconnects == 1
+    # both sides converged to the union
+    assert service.db.tuned_point(BP) == POINT
+    assert host_db.tuned_point(other) == POINT
+    assert sync.failed_rounds == 1 and sync.rounds == 3
+
+
+def test_service_restart_resumes_from_persisted_db(tmp_path):
+    """Kill the service mid-run; a restart on the same path serves every
+    entry any host pushed before the crash."""
+    path = str(tmp_path / "service-db.json")
+    first = TuningService(path=path)
+    client, _ = make_client(first)
+    client.push(db_with_final())
+    del first  # "crash"
+
+    restarted = TuningService(path=path)
+    assert restarted.db.tuned_point(BP) == POINT
+    client2, _ = make_client(restarted)
+    resp = client2.pull(BP)
+    assert resp["found"] == "final"
+    assert resp["entry"]["best"]["point"] == POINT
+    # pushes keep accumulating across the restart
+    other = BasicParams.make(kernel="svc", n=8)
+    client2.push(db_with_final(bp=other))
+    assert TuningService(path=path).db.tuned_point(other) == POINT
+
+
+# ---------------------------------------------------------------------------
+# Pull semantics
+# ---------------------------------------------------------------------------
+
+
+def test_pull_final_nearest_none():
+    service = TuningService()
+    client, _ = make_client(service)
+    assert client.pull(BP)["found"] is None
+    client.push(db_with_final())
+    exact = client.pull(BP)
+    assert exact["found"] == "final" and exact["fingerprint"] == BP.fingerprint()
+    # a sibling class: no exact final -> the nearest entry as a warm seed
+    sibling = BasicParams.make(kernel="svc", n=16)
+    near = client.pull(sibling)
+    assert near["found"] == "nearest"
+    assert near["fingerprint"] == BP.fingerprint()
+    assert near["distance"] > 0
+    assert near["entry"]["best"]["point"] == POINT
+    assert client.stats.pulled_finals == 1 and client.stats.pulled_seeds == 1
+
+
+# ---------------------------------------------------------------------------
+# The lost-demotion race (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("final_first", [True, False])
+def test_concurrent_final_and_demotion_keep_the_demotion(final_first):
+    """Host A pushes the final {P, C}; host B pushes the same record
+    demoted.  In either arrival order the service must end demoted with a
+    re-tune pending — merge alone would let A's final resurrect B's
+    demotion."""
+    service = TuningService()
+    a = db_with_final()                    # host A: live final
+    b = db_with_final()                    # host B: same final, demoted
+    assert b.demote_best(BP)
+    pushes = [a, b] if final_first else [b, a]
+    for db in pushes:
+        service.push(db.export_entries())
+    assert service.db.tuned_point(BP) is None
+    pending = service.retune_pending()
+    assert pending == {BP.fingerprint(): {"point": POINT, "cost": 1.0}}
+    # A's stale final re-pushed later (a retry, a laggard sync): still down
+    service.push(a.export_entries())
+    assert service.db.tuned_point(BP) is None
+    assert BP.fingerprint() in service.retune_pending()
+
+
+def test_retune_request_cleared_by_a_different_final():
+    """A completed re-tune (new point, or same point at a freshly observed
+    cost) supersedes the demotion; the stale final stays dead."""
+    service = TuningService()
+    stale = db_with_final()
+    demoted = db_with_final()
+    demoted.demote_best(BP)
+    service.push(stale.export_entries())
+    service.push(demoted.export_entries())
+    assert service.db.tuned_point(BP) is None
+
+    # host B finishes the re-tune: same point, re-finalized at observed cost
+    retuned = db_with_final()
+    retuned.demote_best(BP)
+    retuned.record_best(BP, POINT, 1.7, "run_time")
+    service.push(retuned.export_entries())
+    assert service.db.tuned_point(BP) == POINT
+    assert service.db.best_cost(BP) == pytest.approx(1.7)
+    assert service.retune_pending() == {}
+    # and the original stale final cannot resurrect the old record now:
+    # the new final (1.7, run_time) wins the merge resolution for good
+    service.push(stale.export_entries())
+    assert service.db.best_cost(BP) == pytest.approx(1.7)
+
+
+def test_explicit_demote_via_client_propagates_to_other_hosts():
+    """host A demotes through the service; host B's next anti-entropy
+    round demotes locally and schedules the DriftMonitor lifecycle."""
+    service = TuningService()
+    costs = [3.0, 1.0, 2.0]
+    db_b = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db_b, warm=False)
+    state = op.resolve(X)
+    assert db_b.tuned_point(state.bp) == {"i": 1}
+
+    # host B publishes its final; host A (same device class) demotes it
+    client_b, _ = make_client(service)
+    client_b.push(db_b)
+    client_a, _ = make_client(service)
+    assert client_a.try_demote(state.bp)
+    assert service.db.tuned_point(state.bp) is None
+
+    monitor = DriftMonitor(factor=2.0, min_observations=1, canary_window=2)
+    sync = AntiEntropySync(client_b, db_b, monitor=monitor).watch(op)
+    costs[0] = 0.3  # the re-tune will nominate candidate 0
+    out = sync.sync_once()
+    assert out["ok"] and out["retunes"] == 1
+    assert db_b.tuned_point(state.bp) is None  # demoted locally too
+    # the inline re-tune canaried the challenger; promote it
+    assert monitor.watch_phase(state) == "canary"
+    for _ in range(2):
+        monitor.observe(op, state, 0.3, (X,), {})
+    assert db_b.tuned_point(state.bp) == {"i": 0}
+    # next round publishes the verdict and the request clears fleet-wide
+    sync.sync_once()
+    assert service.db.tuned_point(state.bp) == {"i": 0}
+    assert service.retune_pending() == {}
+
+
+# ---------------------------------------------------------------------------
+# Remote fleet backend under deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+def test_remote_backend_requires_service():
+    with pytest.raises(ValueError, match="remote"):
+        FleetCoordinator(backend="remote")
+    with pytest.raises(ValueError, match="host_index"):
+        FleetCoordinator(hosts=2, host_index=2)
+
+
+def test_two_host_remote_fleet_converges_under_faults():
+    """The acceptance scenario: 2 hosts, seeded drops + duplicates + one
+    partition/heal, and the service's final best is byte-identical to the
+    single-process run's."""
+    space = demo_space()
+    bp = BasicParams.make(kernel="remote_eq")
+    single = FleetCoordinator(workers=1).search(space, demo_cost, bp=bp)
+
+    service = TuningService()
+    injectors = []
+    for host in range(2):
+        clock = VirtualClock()
+        ft = FaultInjectionTransport(
+            InProcessTransport(service), seed=7 + host,
+            drop_request=0.2, drop_response=0.2, duplicate=0.2, reorder=0.1,
+        )
+        injectors.append(ft)
+        client = ServiceClient(ft, retries=6, jitter_seed=host,
+                               sleep=clock.sleep, now=clock.now)
+        if host == 1:
+            # one full partition mid-run: heal before the barrier retries
+            ft.partition()
+            assert client.try_push(TuningDB()) is False
+            ft.heal()
+        fleet = FleetCoordinator(
+            workers=2, backend="remote", service=client,
+            hosts=2, host_index=host, sync_every=2,
+        ).search(space, demo_cost, bp=bp)
+        assert fleet.service_synced is True
+        assert len(clock.sleeps) == 0 or clock.sleeps  # virtual time only
+
+    assert sum(ft.stats.faults for ft in injectors) > 0  # faults really fired
+    # identical final-best entries vs the single-process run
+    assert service.db.tuned_point(bp) == single.best.point
+    assert service.db.best_cost(bp) == single.best.cost
+    assert service.db.trials(bp) == single.merged.trials(bp)
+    svc_best = service.db._data[bp.fingerprint()]["best"]
+    single_best = single.merged._data[bp.fingerprint()]["best"]
+    assert json.dumps(svc_best, sort_keys=True) == \
+        json.dumps(single_best, sort_keys=True)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234])
+def test_lossy_push_schedules_converge_across_seeds(seed):
+    """Deterministic sibling of the hypothesis convergence property (which
+    needs the optional hypothesis dep): across seeds, any drop/dup/reorder
+    schedule plus heal converges to the lossless two-host merge."""
+    bps = [BasicParams.make(kernel="conv", n=n) for n in (1, 2, 3)]
+    hosts = []
+    for h in range(2):
+        db = TuningDB()
+        for i, bp in enumerate(bps):
+            db.record_trial(bp, {"i": h}, 1.0 + h + i, "before_execution")
+            if (h + i) % 2 == 0:
+                db.record_best(bp, {"i": h}, 1.0 + h + i, "before_execution")
+        hosts.append(db)
+    lossless = TuningDB()
+    for db in hosts:
+        lossless.merge(db.export_entries())
+
+    service = TuningService()
+    injectors = []
+    for h, db in enumerate(hosts):
+        clock = VirtualClock()
+        ft = FaultInjectionTransport(
+            InProcessTransport(service), seed=seed + h,
+            drop_request=0.3, drop_response=0.3, duplicate=0.3, reorder=0.2,
+        )
+        injectors.append(ft)
+        client = ServiceClient(ft, retries=2, jitter_seed=h,
+                               sleep=clock.sleep, now=clock.now)
+        if seed % 2 == h:  # one host rides through a partition
+            ft.partition()
+        for fp in db.fingerprints():
+            client.try_push(db, [fp])
+        client.try_push(db)
+        ft.heal()
+        ft.drop_request = ft.drop_response = 0.0
+        ft.duplicate = ft.reorder = 0.0
+        client.push(db)  # lossless catch-up
+
+    canon = lambda d: json.dumps(d._data, sort_keys=True, default=str)  # noqa: E731
+    assert canon(service.db) == canon(lossless)
+
+
+def test_degraded_service_never_fails_the_fleet_run():
+    """Service fully down: the remote backend still returns the correct
+    local winner, flagged service_synced=False."""
+    space = demo_space()
+    bp = BasicParams.make(kernel="degraded")
+    clock = VirtualClock()
+    ft = FaultInjectionTransport(InProcessTransport(TuningService()))
+    ft.partition()  # never healed
+    client = ServiceClient(ft, retries=1, sleep=clock.sleep, now=clock.now)
+    fleet = FleetCoordinator(
+        workers=2, backend="remote", service=client, sync_every=2,
+    ).search(space, demo_cost, bp=bp)
+    assert fleet.service_synced is False
+    assert fleet.best.point == {"block": 64, "variant": "ij"}
+    assert not client.available
+
+
+# ---------------------------------------------------------------------------
+# BackgroundTuner pull-before-tune / push-after-tune
+# ---------------------------------------------------------------------------
+
+
+def test_background_tuner_adopts_service_final_with_zero_evaluations():
+    service = TuningService()
+    costs = [3.0, 1.0, 2.0]
+    calls = []
+
+    # host A tunes locally and pushes
+    db_a = TuningDB()
+    op_a = AutotunedOp(_toy_spec(costs), db=db_a, warm=False)
+    state_a = op_a.resolve(X)
+    client_a, _ = make_client(service)
+    tuned_fp = state_a.bp.fingerprint()
+    client_a.push(db_a, [tuned_fp])
+
+    # host B: same class arrives; the tuner adopts without measuring
+    db_b = TuningDB()
+    op_b = AutotunedOp(_toy_spec(costs, calls=calls), db=db_b, warm=False)
+    client_b, _ = make_client(service)
+    with BackgroundTuner(service=client_b) as tuner:
+        state_b = tuner.submit(op_b, X)
+        assert tuner.drain(timeout=60)
+    assert calls == []  # ZERO cost evaluations on host B
+    assert state_b.from_cache
+    assert state_b.region.selected == {"i": 1}
+    assert db_b.tuned_point(state_b.bp) == {"i": 1}
+    assert tuner.pulled_labels == ["fleet_toy"]
+    assert client_b.stats.pulled_finals == 1
+    assert not tuner.errors
+
+
+def test_background_tuner_pushes_fresh_winner_to_service():
+    service = TuningService()
+    costs = [4.0, 1.0, 3.0]
+    db = TuningDB()
+    op = AutotunedOp(_toy_spec(costs), db=db, warm=False)
+    client, _ = make_client(service)
+    with BackgroundTuner(service=client) as tuner:
+        state = tuner.submit(op, X)
+        assert tuner.drain(timeout=60)
+    assert tuner.pulled_labels == []  # nothing to pull: it tuned locally
+    assert service.db.tuned_point(state.bp) == {"i": 1}  # ...and published
+    assert client.stats.pushed_entries == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end over real HTTP (stdlib http.server + urllib)
+# ---------------------------------------------------------------------------
+
+
+def test_http_transport_end_to_end():
+    service = TuningService()
+    try:
+        server = serve_http(service, port=0)
+    except OSError as e:  # sandboxed CI without loopback bind
+        pytest.skip(f"cannot bind a loopback port: {e}")
+    host, port = server.server_address[:2]
+    try:
+        client = ServiceClient(HTTPTransport(f"http://{host}:{port}"),
+                               retries=1)
+        health = client.health()
+        assert health["ok"] and health["protocol"] == 1
+        client.push(db_with_final())
+        resp = client.pull(BP)
+        assert resp["found"] == "final"
+        assert resp["entry"]["best"]["point"] == POINT
+        # a malformed request must not kill the server
+        with pytest.raises(ServiceUnavailable):
+            ServiceClient(HTTPTransport(f"http://{host}:{port}"),
+                          retries=0).__getattribute__("_call")("nope", {})
+        assert client.health()["ok"]
+    finally:
+        server.shutdown()
+
+
+def test_http_transport_connection_refused_is_transport_error():
+    t = HTTPTransport("http://127.0.0.1:1", timeout_s=0.5)  # reserved port
+    with pytest.raises(TransportError):
+        t.request("health", {})
