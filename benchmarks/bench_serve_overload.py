@@ -1,0 +1,169 @@
+"""Hardened vs un-hardened engine under the adversarial overload trace.
+
+The trace (:func:`~repro.data.adversarial_trace`) is hostile on purpose:
+one-burst arrivals overload a 2-block KV pool behind a 3-deep admission
+queue, a fraction of requests carry deadlines and priorities, some are
+malformed (empty prompt / zero tokens / over-capacity prompt), one is
+forced to an unmeetable deadline, and a seeded
+:class:`~repro.runtime.chaos.ChaosInjector` adds transient step faults,
+KV-pool squeezes, and virtual delays on top.
+
+Three legs on the same trace:
+
+* ``unhardened`` — the pre-hardening contract (``hardened=False``): the
+  first malformed request or injected fault raises and the whole trace is
+  lost.  The leg *must* crash — that is the baseline the hardening exists
+  to beat, and the gate fails if it stops crashing (the trace went soft).
+* ``chaos``      — the hardened engine, warmed, measured with chaos
+  attached.  The gates are the drain contract: every request retired
+  exactly once with a valid status, ``ok`` outputs bit-identical to the
+  one-request-at-a-time oracle (forced-replay recompute preserves this
+  across preemptions), every KV block back in the pool, zero hot-path
+  tuning evaluations, and at least one shed / timeout / error each so the
+  hardened paths demonstrably fired.
+* ``healthy``    — the same engine, chaos detached, re-served: proves the
+  engine is still serviceable after chaos and provides the like-for-like
+  p99 TTFT denominator for the (generously bounded) overload ratio.
+
+Every gated quantity is a deterministic flag/count or a back-to-back
+ratio of like timings on one virtual clock — nothing gates on machine
+noise.
+"""
+from __future__ import annotations
+
+from .common import FAST, emit
+
+STATUSES = ("ok", "timed_out", "shed", "error")
+
+
+def _oracle(cfg, params, reqs, max_len):
+    """One-request-at-a-time greedy decode over the well-formed subset."""
+    from repro.runtime import Server
+
+    srv = Server(cfg, params, batch_size=1, max_len=max_len)
+    out = {}
+    for r in reqs:
+        if len(r.prompt) >= 1 and 1 <= r.max_new_tokens \
+                and len(r.prompt) + r.max_new_tokens <= max_len:
+            out.update(srv.run([r]))
+    return out
+
+
+def run() -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import adversarial_trace
+    from repro.models import init_params, param_specs
+    from repro.runtime import ChaosInjector, StreamingEngine
+    from repro.runtime.engine import StreamStats
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
+    n = 8 if FAST else 16
+    scale = 0.25 if FAST else 0.5
+    max_len = 48 if FAST else 96
+    trace = adversarial_trace(
+        cfg, n, seed=7, scale=scale,
+        burst_size=n,                 # one burst: the queue must overflow
+        deadline_fraction=0.4, deadline_ttl_s=0.4,
+        priority_levels=3, malformed_rate=0.25, max_len_hint=max_len,
+    )
+    # force one guaranteed timeout: a well-formed request whose deadline is
+    # over before its first decode round can possibly complete
+    victim = next(
+        r for r in trace if len(r.prompt) >= 1 and r.max_new_tokens >= 1
+        and len(r.prompt) + 16 <= max_len
+    )
+    victim.max_new_tokens = 16
+    victim.deadline_s = victim.arrival_s + 1e-6
+    oracle = _oracle(cfg, params, trace, max_len)
+
+    def chaos(seed=7):
+        return ChaosInjector(
+            seed=seed, step_fault_rate=0.15,
+            squeeze_rate=0.2, squeeze_hold=2,
+            delay_rate=0.2, delay_s=0.02,
+        )
+
+    # -- leg 1: the un-hardened engine must crash on this trace -------------
+    un = StreamingEngine(
+        cfg, params, n_blocks=2, max_len=max_len, hardened=False,
+        chaos=chaos(),
+    )
+    crashed, kind = 0, "none"
+    try:
+        un.serve(trace)
+    except Exception as e:
+        crashed, kind = 1, type(e).__name__
+    emit("serve_overload_unhardened", 0.0, f"crashed={crashed};kind={kind}")
+
+    # -- leg 2: hardened engine, warmed, measured under chaos ---------------
+    eng = StreamingEngine(
+        cfg, params, n_blocks=2, max_len=max_len,
+        queue_limit=3, default_ttl_s=None, max_preemptions=3,
+    )
+    for _ in range(3):  # compile every reachable shape off the clock
+        eng.stats = StreamStats()
+        eng.serve(trace)
+    eng.chaos = chaos()
+    eng.stats = StreamStats()
+    out = eng.serve(trace)
+    s = eng.stats
+    rids = {r.rid for r in trace}
+    drained = int(set(eng.results) == rids and len(eng.results) == len(rids))
+    statuses_valid = int(
+        all(res.status in STATUSES for res in eng.results.values())
+    )
+    oracle_match = int(all(
+        toks == oracle[rid] for rid, toks in out.items()
+    ) and all(
+        eng.results[rid].status == "ok" for rid in out
+    ))
+    blocks_free = int(
+        eng.cache.free == eng.cache.n_blocks and not eng.cache.block_table
+    )
+    counts = {st: 0 for st in STATUSES}
+    for res in eng.results.values():
+        counts[res.status] += 1
+    cs = eng.chaos.stats
+    chaos_p99 = s.ttft_percentile(99)
+    emit(
+        "serve_overload_chaos_p99", chaos_p99,
+        f"drained={drained};statuses_valid={statuses_valid}"
+        f";oracle_match={oracle_match};blocks_free={blocks_free}"
+        f";hot_evals={eng.hot_path_cost_evaluations}"
+        f";ok={counts['ok']};timed_out={counts['timed_out']}"
+        f";shed={counts['shed']};error={counts['error']}"
+        f";faults={cs.faults};squeezes={cs.blocks_squeezed}"
+        f";delays={cs.delays};step_faults={s.step_faults}"
+        f";preempted={s.preempted}",
+    )
+
+    # -- leg 3: chaos detached — still serviceable, healthy p99 -------------
+    eng.chaos = None
+    eng.stats = StreamStats()
+    out_healthy = eng.serve(trace)
+    healthy_p99 = eng.stats.ttft_percentile(99)
+    healthy_ok = int(all(
+        toks == oracle[rid] for rid, toks in out_healthy.items()
+    ))
+    emit(
+        "serve_overload_healthy_p99", healthy_p99,
+        f"oracle_match={healthy_ok};ok={len(out_healthy)}",
+    )
+
+    emit(
+        "serve_overload/summary", chaos_p99,
+        f"unhardened_crashes={crashed};drained={drained}"
+        f";statuses_valid={statuses_valid};oracle_match={oracle_match & healthy_ok}"
+        f";blocks_free={blocks_free}"
+        f";hot_evals={eng.hot_path_cost_evaluations}"
+        f";timed_out={counts['timed_out']};shed={counts['shed']}"
+        f";error={counts['error']};faults={cs.faults}"
+        f";p99_ratio={chaos_p99 / max(healthy_p99, 1e-9):.2f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

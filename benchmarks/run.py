@@ -27,6 +27,7 @@ def main() -> None:
         bench_fleet_service,
         bench_fleet_tune,
         bench_roofline,
+        bench_serve_overload,
         bench_serve_stream,
         bench_serve_traffic,
         bench_train_step,
@@ -42,6 +43,7 @@ def main() -> None:
         bench_roofline,
         bench_serve_traffic,
         bench_serve_stream,
+        bench_serve_overload,
         bench_tune_throughput,
         bench_fleet_tune,
         bench_fleet_service,

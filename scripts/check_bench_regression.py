@@ -23,6 +23,13 @@ checks three gates against ``benchmarks/baselines/``:
   tok/s under the bursty open-loop trace (a back-to-back comparison on
   one process and virtual clock), with ``hot_evals=0`` and at least
   ``min_tuned_sched_classes`` scheduler classes tuned off the hot path;
+* **serve_overload.json** — the hardened engine's drain contract
+  (``serve_overload/summary``): under the adversarial chaos trace the
+  un-hardened engine must crash while the hardened one retires every
+  request exactly once with valid statuses, bit-matches the sequential
+  oracle on ``ok`` requests, frees every KV block, pays zero hot-path
+  evaluations, demonstrably fires the shed/timeout/error paths, and keeps
+  chaos p99 TTFT within ``max_p99_ratio`` of the healthy pass;
 * **fleet_tune.json** — the sharded fleet search (``fleet_tune/summary``)
   must report identical winners to single-process on every kernel, full
   space coverage, and balanced shards; the wall-clock speedup ratio is
@@ -230,6 +237,65 @@ def check_serve_stream(record: dict, problems: list) -> str:
     )
 
 
+def check_serve_overload(record: dict, problems: list) -> str:
+    with open(BASELINES / "serve_overload.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "serve_overload/summary")
+    if fields is None:
+        problems.append(
+            "serve_overload: no serve_overload/summary row in record"
+        )
+        return "serve_overload: missing"
+    if baseline.get("require_unhardened_crash", True) and fields.get(
+        "unhardened_crashes"
+    ) != "1":
+        problems.append(
+            "serve_overload: the un-hardened engine survived the adversarial "
+            "trace — the crash baseline went soft, the hardening gate proves "
+            "nothing"
+        )
+    for key, what in (
+        ("drained", "some request was never retired"),
+        ("statuses_valid", "a request retired with an unknown status"),
+        ("oracle_match", "an ok request's tokens diverged from the "
+                         "sequential oracle"),
+        ("blocks_free", "KV blocks leaked after the drain"),
+    ):
+        if baseline.get(f"require_{key}", True) and fields.get(key) != "1":
+            problems.append(f"serve_overload: {what} ({key}={fields.get(key)})")
+    if baseline.get("require_hot_evals_zero", True) and fields.get(
+        "hot_evals"
+    ) != "0":
+        problems.append(
+            "serve_overload: hardened serve paid hot-path cost evaluations "
+            f"(hot_evals={fields.get('hot_evals')})"
+        )
+    for key, floor_key in (("timed_out", "min_timed_out"),
+                           ("shed", "min_shed"),
+                           ("error", "min_error"),
+                           ("faults", "min_faults")):
+        got = int(fields.get(key, 0))
+        floor = int(baseline.get(floor_key, 1))
+        if got < floor:
+            problems.append(
+                f"serve_overload: {key}={got} — that hardened path never "
+                f"fired (need >= {floor}); the drain gate proved nothing"
+            )
+    ratio = float(fields.get("p99_ratio", 0.0))
+    cap = float(baseline.get("max_p99_ratio", 100.0))
+    if ratio > cap:
+        problems.append(
+            f"serve_overload: chaos p99 TTFT blew up to {ratio:.1f}x the "
+            f"healthy pass (cap {cap:.0f}x)"
+        )
+    return (
+        f"serve_overload: unhardened crashes, hardened drains "
+        f"({fields.get('timed_out')} timed out/{fields.get('shed')} shed/"
+        f"{fields.get('error')} error) under {fields.get('faults')} faults, "
+        f"p99 {ratio:.1f}x healthy"
+    )
+
+
 def check_fleet_tune(record: dict, problems: list) -> str:
     with open(BASELINES / "fleet_tune.json") as f:
         baseline = json.load(f)
@@ -337,6 +403,7 @@ def main() -> int:
         check_dispatch(record, problems),
         check_serve_traffic(record, problems),
         check_serve_stream(record, problems),
+        check_serve_overload(record, problems),
         check_fleet_tune(record, problems),
         check_fleet_service(record, problems),
     ]

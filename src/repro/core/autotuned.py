@@ -48,6 +48,11 @@ from .tuner import RuntimeSelector, Tuner
 class TrialBudgetExhausted(Exception):
     """Raised internally when a search hits its evaluation budget."""
 
+    # marks this as tuner control flow: the measurement guardrail in
+    # Tuner.tune must re-raise it, not quarantine the candidate it
+    # happened to interrupt
+    tuning_control = True
+
 
 # Upper bound on fast-dispatch routes per op.  Structural keys include
 # hashable scalar argument *values*, so an op called with an unbounded

@@ -16,19 +16,24 @@ On-disk layout (schema v2)::
            "layer": "before_execution",
            "best": {"point": {...}, "cost": 1.2e-3},
            "trials": {"<pp_key>": cost, ...},
+           "quarantined": {"<pp_key>": {...}}, # broken-measurement markers
            "history": [...],                 # run-time layer observations
            "events": [...]                   # drift/canary audit log (docs/fleet.md)
         }, ...
-      }
+      },
+      "db_events": [...]                     # DB-level audit (salvage recoveries)
     }
 
 Schema v1 (the seed format) was the bare ``entries`` mapping with no
 envelope; :meth:`TuningDB.load` still reads it.
 
 Writes are atomic (tmp + rename) so a crashed AT run never corrupts the DB —
-the same discipline the checkpointing layer uses.  Every flush first merges
-the on-disk state into the in-memory view, so concurrent writers (e.g. two
-install-layer sweeps over disjoint shape classes) union rather than clobber.
+the same discipline the checkpointing layer uses.  Each flush additionally
+keeps the previous good flush as ``<path>.bak``, and loading salvages from
+it when the main file is torn or missing (the recovery is logged in
+``db_events``).  Every flush first merges the on-disk state into the
+in-memory view, so concurrent writers (e.g. two install-layer sweeps over
+disjoint shape classes) union rather than clobber.
 """
 from __future__ import annotations
 
@@ -57,6 +62,10 @@ RUNTIME_FLUSH_EVERY = 16
 EVENT_LIMIT = 256
 
 
+class _SchemaTooNew(ValueError):
+    """On-disk schema newer than this code: never salvage over it."""
+
+
 class TuningDB:
     SCHEMA_VERSION = SCHEMA_VERSION
 
@@ -64,11 +73,12 @@ class TuningDB:
         self.path = path
         self._lock = threading.Lock()
         self._data: Dict[str, Dict[str, Any]] = {}
+        self._db_events: list = []
         self._disk_sig: Optional[Tuple[int, int]] = None
         self._runtime_obs = 0
         self._event_seq = 0
-        if path and os.path.exists(path):
-            self._data = self._read_file(path)
+        if path and (os.path.exists(path) or os.path.exists(path + ".bak")):
+            self._data, self._db_events = self._load_salvaging(path)
             self._disk_sig = self._file_sig(path)
 
     # -- persistence ---------------------------------------------------------
@@ -128,6 +138,15 @@ class TuningDB:
     def record_trial(
         self, bp: BasicParams, point: Mapping[str, Any], cost: float, layer: str
     ) -> None:
+        if not math.isfinite(cost):
+            # measurement guardrail: a NaN/inf trial is a broken measurement,
+            # not a slow one — quarantine it instead of letting NaN poison
+            # the running best (NaN comparisons are always False, so a NaN
+            # cost would silently survive min/argmin logic)
+            self.record_quarantine(
+                bp, point, f"non-finite trial cost {cost!r}", layer=layer
+            )
+            return
         with self._lock:
             entry = self._entry(bp, layer)
             entry["trials"][pp_key(point)] = cost
@@ -146,9 +165,34 @@ class TuningDB:
         fast path (``tuned_point``) trusts finals only, so an interrupted or
         budget-capped sweep resumes instead of freezing its interim winner.
         """
+        if not math.isfinite(cost):
+            raise ValueError(
+                f"record_best: non-finite cost {cost!r} for {pp_key(point)} — "
+                "quarantined candidates can never become a final best"
+            )
         with self._lock:
             entry = self._entry(bp, layer)
             entry["best"] = {"point": dict(point), "cost": cost, "final": True}
+            self._flush()
+
+    def record_quarantine(
+        self,
+        bp: BasicParams,
+        point: Mapping[str, Any],
+        reason: str,
+        layer: Optional[str] = None,
+    ) -> None:
+        """Mark one PP point as producing broken measurements.
+
+        A quarantined point is barred from the zero-re-tune fast path
+        (:meth:`tuned_point` refuses a best that sits on it) and from
+        cross-class warm starts, and :meth:`merge` unions the markers, so a
+        candidate that NaN'd on one fleet host is distrusted fleet-wide.
+        """
+        with self._lock:
+            entry = self._entry(bp, layer)
+            q = entry.setdefault("quarantined", {})
+            q[pp_key(point)] = {"point": dict(point), "reason": str(reason)}
             self._flush()
 
     def record_runtime_observation(
@@ -243,11 +287,25 @@ class TuningDB:
         return None
 
     def tuned_point(self, bp: BasicParams) -> Optional[Dict[str, Any]]:
-        """The best point, only if it came from a completed search."""
+        """The best point, only if it came from a completed search and has
+        not been quarantined (a merge can carry in a foreign final whose
+        point a later measurement quarantined — distrust wins)."""
         entry = self._data.get(bp.fingerprint())
         if entry and entry.get("best") and entry["best"].get("final"):
-            return dict(entry["best"]["point"])
+            point = entry["best"]["point"]
+            if pp_key(point) in entry.get("quarantined", {}):
+                return None
+            return dict(point)
         return None
+
+    def quarantined(self, bp: BasicParams) -> Dict[str, Dict[str, Any]]:
+        """The quarantine markers for this entry (pp_key → record)."""
+        entry = self._data.get(bp.fingerprint(), {})
+        return {k: dict(v) for k, v in entry.get("quarantined", {}).items()}
+
+    def is_quarantined(self, bp: BasicParams, point: Mapping[str, Any]) -> bool:
+        entry = self._data.get(bp.fingerprint(), {})
+        return pp_key(point) in entry.get("quarantined", {})
 
     def best_cost(self, bp: BasicParams) -> Optional[float]:
         entry = self._data.get(bp.fingerprint())
@@ -318,6 +376,8 @@ class TuningDB:
                 rec = entry.get("best")
                 if not rec or not rec.get("final"):
                     continue
+                if pp_key(rec.get("point", {})) in entry.get("quarantined", {}):
+                    continue  # a distrusted winner must not seed warm starts
                 echo = _json_roundtrip(entry.get("bp", {}))
                 if any(echo.get(k) != target[k] for k in match):
                     continue
@@ -372,18 +432,81 @@ class TuningDB:
     # -- internals -------------------------------------------------------------
 
     @staticmethod
-    def _read_file(path: str) -> Dict[str, Dict[str, Any]]:
+    def _read_raw(path: str) -> Any:
         with open(path) as f:
             raw = json.load(f)
         if isinstance(raw, dict) and "schema_version" in raw:
             version = raw["schema_version"]
             if version > SCHEMA_VERSION:
-                raise ValueError(
+                raise _SchemaTooNew(
                     f"TuningDB {path}: schema v{version} is newer than "
                     f"supported v{SCHEMA_VERSION}"
                 )
+        return raw
+
+    @classmethod
+    def _read_file(cls, path: str) -> Dict[str, Dict[str, Any]]:
+        raw = cls._read_raw(path)
+        if isinstance(raw, dict) and "schema_version" in raw:
             return dict(raw.get("entries", {}))
         return dict(raw)  # legacy v1: bare entries mapping
+
+    @classmethod
+    def _load_salvaging(cls, path: str) -> Tuple[Dict[str, Dict[str, Any]], list]:
+        """Load ``path``, falling back to its ``.bak`` (the previous good
+        flush) when the main file is truncated/corrupt or missing.
+
+        A flush that died mid-write leaves either a torn main file (the
+        pre-atomic-rename legacy) or — with the two-step rename — a good
+        ``.bak`` and no main file.  Either way the last *completed* flush
+        survives, and the recovery is logged in the persisted ``db_events``
+        list so an operator can see data was salvaged (and roughly how much
+        was lost).  A schema-too-new error still raises: that is an operator
+        mistake, not a crash to paper over.
+        """
+        bak = path + ".bak"
+        try:
+            raw = cls._read_raw(path)
+            events = list(raw.get("db_events", [])) if (
+                isinstance(raw, dict) and "schema_version" in raw
+            ) else []
+            return cls._entries_of(raw), events
+        except _SchemaTooNew:
+            raise
+        except (json.JSONDecodeError, OSError, TypeError, ValueError) as exc:
+            err = f"{type(exc).__name__}: {exc}"
+        try:
+            raw = cls._read_raw(bak)
+            events = list(raw.get("db_events", [])) if (
+                isinstance(raw, dict) and "schema_version" in raw
+            ) else []
+            entries = cls._entries_of(raw)
+        except _SchemaTooNew:
+            raise
+        except (json.JSONDecodeError, OSError, TypeError, ValueError) as bak_exc:
+            # neither file readable: start empty, but leave the audit trail
+            return {}, [{
+                "kind": "db_salvage_failed", "t": round(time.time(), 6),
+                "error": err, "bak_error": f"{type(bak_exc).__name__}: {bak_exc}",
+            }]
+        events.append({
+            "kind": "db_salvaged", "t": round(time.time(), 6),
+            "source": os.path.basename(bak), "error": err,
+            "entries": len(entries),
+        })
+        return entries, events
+
+    @staticmethod
+    def _entries_of(raw: Any) -> Dict[str, Dict[str, Any]]:
+        if isinstance(raw, dict) and "schema_version" in raw:
+            return dict(raw.get("entries", {}))
+        return dict(raw)  # legacy v1: bare entries mapping
+
+    def db_events(self) -> list:
+        """DB-level audit events (salvage recoveries), persisted across
+        flushes — distinct from per-entry tuning events."""
+        with self._lock:
+            return [dict(e) for e in self._db_events]
 
     def _entry(self, bp: BasicParams, layer: Optional[str] = None) -> Dict[str, Any]:
         fp = bp.fingerprint()
@@ -427,9 +550,16 @@ class TuningDB:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(
-                    {"schema_version": SCHEMA_VERSION, "entries": self._data},
+                    {"schema_version": SCHEMA_VERSION, "entries": self._data,
+                     "db_events": self._db_events},
                     f, indent=1, default=str,
                 )
+            # keep the outgoing file as the last-good-flush backup before
+            # promoting the new one: a crash in the window between the two
+            # renames leaves a good .bak and no main file, which
+            # _load_salvaging recovers (logged as a db_salvaged event)
+            if os.path.exists(self.path):
+                os.replace(self.path, self.path + ".bak")
             os.replace(tmp, self.path)
             self._disk_sig = self._file_sig(self.path)
         finally:
@@ -520,6 +650,18 @@ def _merge_entries(
             their_best, ours.get("best"), prefer_ours
         ):
             ours["best"] = json.loads(json.dumps(their_best, default=str))
+        # quarantine markers union (distrust is sticky fleet-wide); on a
+        # same-key conflict the canonically smaller record wins so the join
+        # stays commutative
+        their_q = theirs.get("quarantined", {})
+        if their_q:
+            q = ours.setdefault("quarantined", {})
+            for key, rec in their_q.items():
+                rec_copy = json.loads(json.dumps(rec, default=str))
+                if key not in q:
+                    q[key] = rec_copy
+                elif not prefer_ours and _canon(rec_copy) < _canon(q[key]):
+                    q[key] = rec_copy
         for field, key, limit in _LOG_FIELDS:
             _union_log(ours, theirs, field, limit, key)
     if not prefer_ours:

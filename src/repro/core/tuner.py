@@ -64,28 +64,66 @@ class Tuner:
 
         supports_budget = bool(getattr(cost, "supports_budget", False))
 
+        def guarded(point: Mapping[str, Any], fn: Callable[[], float]) -> float:
+            """Measurement guardrail: a candidate whose cost raises or comes
+            back non-finite (NaN/inf) is *quarantined* in the DB — it can
+            never win this search (cost becomes +inf) nor any later one
+            (merge propagates the marker fleet-wide) — instead of a NaN
+            silently surviving argmin comparisons or one broken candidate
+            aborting the whole sweep.  Control-flow exceptions (trial-budget
+            exhaustion marks itself ``tuning_control``) still propagate."""
+            try:
+                c = float(fn())
+            except Exception as exc:
+                if getattr(exc, "tuning_control", False):
+                    raise
+                self.db.record_quarantine(
+                    bp, point,
+                    f"cost raised {type(exc).__name__}: {exc}", layer=layer,
+                )
+                return math.inf
+            if not math.isfinite(c):
+                self.db.record_quarantine(
+                    bp, point, f"non-finite cost {c!r}", layer=layer
+                )
+                return math.inf
+            return c
+
         def caching_cost(
             point: Mapping[str, Any], budget: Optional[int] = None
         ) -> float:
+            if self.db.is_quarantined(bp, point):
+                return math.inf  # known-broken: never re-measure, never wins
             if budget is not None and supports_budget:
                 # budget-aware re-measurement (SuccessiveHalving rungs): a
                 # higher budget buys a *better* estimate, so the cached
                 # trial must not short-circuit it; the DB keeps the latest
                 # (highest-budget) estimate for resume.
-                c = float(cost(point, budget))
-                self.db.record_trial(bp, point, c, layer)
+                c = guarded(point, lambda: cost(point, budget))
+                if math.isfinite(c):
+                    self.db.record_trial(bp, point, c, layer)
                 return c
             prior = None if fresh else self.db.trial_cost(bp, point)
             if prior is not None:
                 return prior  # resume support: interrupted AT re-uses trials
-            c = float(cost(point))
-            self.db.record_trial(bp, point, c, layer)
+            c = guarded(point, lambda: cost(point))
+            if math.isfinite(c):
+                self.db.record_trial(bp, point, c, layer)
             return c
 
         # budgeted searches probe this to decide whether budgets pass through
         caching_cost.supports_budget = supports_budget
 
         result = (search or self.search).run(region.space, caching_cost)
+        if not math.isfinite(result.best.cost):
+            # every candidate raised or returned NaN/inf: there is no sane
+            # winner to select or finalize — fail the search loudly (the
+            # BackgroundTuner records it as a failed job; the live path
+            # keeps serving on the region's default selection)
+            raise RuntimeError(
+                f"tuning failed for {region.name}: every candidate "
+                "quarantined (raising or non-finite cost)"
+            )
         if finalize:
             self.db.record_best(bp, result.best.point, result.best.cost, layer)
         if select:

@@ -1,6 +1,7 @@
 from .pipeline import (
     SyntheticLMDataset,
     ServingRequest,
+    adversarial_trace,
     bursty_open_loop_trace,
     mixed_traffic_trace,
     synthetic_requests,
@@ -9,6 +10,7 @@ from .pipeline import (
 __all__ = [
     "SyntheticLMDataset",
     "ServingRequest",
+    "adversarial_trace",
     "bursty_open_loop_trace",
     "mixed_traffic_trace",
     "synthetic_requests",

@@ -109,6 +109,14 @@ class ServingRequest:
     # open-loop arrival offset in (virtual) seconds since trace start; 0 for
     # the closed-loop traces, so every pre-stream consumer is unaffected.
     arrival_s: float = 0.0
+    # absolute virtual-clock deadline: past it the hardened engine retires
+    # the request ``timed_out`` instead of serving it.  None = no deadline
+    # (the engine-level default TTL, if any, applies).
+    deadline_s: Optional[float] = None
+    # admission priority: higher admits first, and a strictly higher waiting
+    # priority may preempt a lower in-flight one when the KV pool is
+    # exhausted.  0 (the default) reproduces pre-hardening scheduling.
+    priority: int = 0
 
 
 def synthetic_requests(
@@ -198,4 +206,66 @@ def bursty_open_loop_trace(
     # within-burst jitter may reorder neighbours; keep the list sorted by
     # arrival so replay loops can admit with a simple cursor
     reqs.sort(key=lambda r: (r.arrival_s, r.rid))
+    return reqs
+
+
+def adversarial_trace(
+    cfg: ModelConfig,
+    n: int,
+    seed: int = 0,
+    scale: float = 1.0,
+    burst_size: int = 4,
+    burst_gap_s: float = 0.05,
+    deadline_fraction: float = 0.5,
+    deadline_ttl_s: float = 0.5,
+    priority_levels: int = 3,
+    malformed_rate: float = 0.0,
+    max_len_hint: int = 0,
+) -> List[ServingRequest]:
+    """The overload/chaos trace: :func:`bursty_open_loop_trace` made hostile.
+
+    Layers, from a separate seeded RNG (so the prompt/length mix stays
+    byte-identical to the bursty trace at the same ``(seed, n, scale)``):
+
+    * **deadlines** — a ``deadline_fraction`` subset gets an absolute
+      deadline ``arrival_s + deadline_ttl_s`` (tight enough to miss under
+      queueing, generous enough to make under light load);
+    * **priorities** — uniform over ``[0, priority_levels)``, so the
+      hardened engine's priority admission and KV-block preemption paths
+      actually fire;
+    * **malformed requests** — at ``malformed_rate``, a request is replaced
+      by one of the malformed variants the hardened engine must absorb
+      (empty prompt; ``max_new_tokens`` 0; prompt longer than the engine
+      capacity ``max_len_hint`` when given): per-request validation retires
+      them with ``error`` status, the un-hardened engine raises.
+
+    Deterministic in all arguments; sorted by ``(arrival_s, rid)`` like
+    every open-loop trace.
+    """
+    if not (0.0 <= deadline_fraction <= 1.0):
+        raise ValueError(f"deadline_fraction must be in [0, 1], got {deadline_fraction}")
+    if not (0.0 <= malformed_rate <= 1.0):
+        raise ValueError(f"malformed_rate must be in [0, 1], got {malformed_rate}")
+    if priority_levels < 1:
+        raise ValueError(f"priority_levels must be >= 1, got {priority_levels}")
+    reqs = bursty_open_loop_trace(
+        cfg, n, seed=seed, scale=scale,
+        burst_size=burst_size, burst_gap_s=burst_gap_s,
+    )
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xAD5E_5]))
+    for r in reqs:
+        if deadline_fraction and rng.random() < deadline_fraction:
+            r.deadline_s = r.arrival_s + deadline_ttl_s
+        r.priority = int(rng.integers(0, priority_levels))
+        if malformed_rate and rng.random() < malformed_rate:
+            kind = int(rng.integers(0, 3 if max_len_hint else 2))
+            if kind == 0:
+                r.prompt = np.zeros((0,), dtype=np.int32)
+            elif kind == 1:
+                r.max_new_tokens = 0
+            else:
+                overlong = max_len_hint + 8
+                r.prompt = rng.integers(
+                    0, cfg.vocab_size - 1, size=overlong
+                ).astype(np.int32)
     return reqs

@@ -13,8 +13,17 @@ path (the latency-comparison baseline); the default performs no tuning.
 trace feeds an admission queue, the iteration-level scheduler interleaves
 prefill and decode over a paged KV cache, and the report adds TTFT
 percentiles (the metric static batching loses under bursty load).
+
+Overload/chaos knobs (stream mode, docs/serving.md): ``--deadline`` sets a
+per-request TTL, ``--queue-limit``/``--shed-policy`` bound the admission
+queue, and ``--chaos-seed`` runs the trace under the seeded
+:class:`~repro.runtime.chaos.ChaosInjector` (transient step faults, KV
+squeezes, delays) on the adversarial trace.  The run exits non-zero if the
+hardened engine fails to retire every request exactly once — the drain
+contract the chaos-smoke CI job asserts.
 """
 import argparse
+import sys
 
 
 def main() -> None:
@@ -57,6 +66,37 @@ def main() -> None:
     ap.add_argument(
         "--burst-gap", type=float, default=0.05,
         help="virtual seconds between bursts (bursty trace)",
+    )
+    ap.add_argument(
+        "--deadline", type=float, default=None,
+        help="per-request TTL in virtual seconds (stream mode): a request "
+             "not finished within this of its arrival retires timed_out",
+    )
+    ap.add_argument(
+        "--queue-limit", type=int, default=None,
+        help="admission queue bound (stream mode): excess waiting requests "
+             "are shed per --shed-policy",
+    )
+    ap.add_argument(
+        "--shed-policy", default=None,
+        choices=("reject-new", "drop-oldest", "deadline-aware"),
+        help="load-shedding policy when the queue exceeds --queue-limit "
+             "(default: let the tuned scheduler knob pick)",
+    )
+    ap.add_argument(
+        "--chaos-seed", type=int, default=None,
+        help="run under the seeded ChaosInjector (stream mode): transient "
+             "step faults, KV-pool squeezes, and virtual delays; the trace "
+             "switches to the adversarial variant (deadlines + priorities)",
+    )
+    ap.add_argument(
+        "--chaos-fault-rate", type=float, default=0.05,
+        help="per-step transient fault probability under --chaos-seed",
+    )
+    ap.add_argument(
+        "--unhardened", action="store_true",
+        help="disable the engine's hardened paths (strict upfront "
+             "validation, raise-on-stall) — the crash/deadlock baseline",
     )
     tune_mode = ap.add_mutually_exclusive_group()
     tune_mode.add_argument(
@@ -108,21 +148,41 @@ def main() -> None:
                      "tunes its scheduler knobs per traffic class instead)")
         if args.drift_factor:
             ap.error("--drift-factor is a static-Server mode")
+    else:
+        for flag, val in (("--deadline", args.deadline),
+                          ("--queue-limit", args.queue_limit),
+                          ("--shed-policy", args.shed_policy),
+                          ("--chaos-seed", args.chaos_seed)):
+            if val is not None:
+                ap.error(f"{flag} requires --stream (the static Server has "
+                         "no admission queue to bound)")
 
     import jax
 
     from repro.configs import get_config
     from repro.core import TuningDB
     from repro.data import (
-        bursty_open_loop_trace, mixed_traffic_trace, synthetic_requests,
+        adversarial_trace, bursty_open_loop_trace, mixed_traffic_trace,
+        synthetic_requests,
     )
     from repro.fleet import DriftMonitor, FleetCoordinator
     from repro.models import init_params, param_specs
-    from repro.runtime import BackgroundTuner, Server, StreamingEngine
+    from repro.runtime import (
+        BackgroundTuner, ChaosInjector, Server, StreamingEngine,
+    )
 
     cfg = get_config(args.arch, smoke=not args.full)
     params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
-    if args.trace == "bursty":
+    if args.stream and args.chaos_seed is not None:
+        # the overload trace: the bursty mix plus deadlines and priorities,
+        # so the hardened paths (timeout, shed, preempt) actually fire
+        requests = adversarial_trace(
+            cfg, args.requests, seed=args.chaos_seed,
+            scale=1.0 if args.full else 0.25,
+            burst_size=args.burst_size, burst_gap_s=args.burst_gap,
+            deadline_ttl_s=args.deadline or 0.5,
+        )
+    elif args.trace == "bursty":
         # smoke configs get a scaled-down trace: full-length decodes dominate
         # a CI smoke run without exercising anything extra
         requests = bursty_open_loop_trace(
@@ -146,6 +206,15 @@ def main() -> None:
         max_len = args.max_len or max(
             len(r.prompt) + r.max_new_tokens for r in requests
         )
+        chaos = (
+            ChaosInjector(
+                seed=args.chaos_seed,
+                step_fault_rate=args.chaos_fault_rate,
+                squeeze_rate=0.1,
+                delay_rate=0.1,
+            )
+            if args.chaos_seed is not None else None
+        )
         engine = StreamingEngine(
             cfg,
             params,
@@ -155,6 +224,11 @@ def main() -> None:
             background_tuner=tuner,
             inline_tune=args.inline_tune,
             device_key=args.device_key,
+            hardened=not args.unhardened,
+            queue_limit=args.queue_limit,
+            shed_policy=args.shed_policy,
+            default_ttl_s=args.deadline,
+            chaos=chaos,
         )
         out = engine.serve(requests)
         s = engine.stats
@@ -164,6 +238,31 @@ def main() -> None:
             f"({s.prefill_steps} prefill / {s.decode_steps} decode steps, "
             f"peak in-flight {s.peak_in_flight})"
         )
+        if not args.unhardened:
+            counts = {st: 0 for st in ("ok", "timed_out", "shed", "error")}
+            for res in engine.results.values():
+                counts[res.status] += 1
+            print(
+                "retired: "
+                + ", ".join(f"{k} {v}" for k, v in counts.items())
+                + (f", duplicates {s.duplicates}" if s.duplicates else "")
+            )
+            if chaos is not None:
+                cs = chaos.stats
+                print(
+                    f"chaos: {cs.faults} faults injected "
+                    f"({cs.transient_faults} transient / "
+                    f"{cs.poison_faults} poison), "
+                    f"{cs.blocks_squeezed} KV squeezes, {cs.delays} delays; "
+                    f"engine absorbed {s.step_faults} step faults, "
+                    f"{s.preempted} preemptions"
+                )
+            unique_rids = {r.rid for r in requests}
+            if set(engine.results) != unique_rids:
+                missing = sorted(unique_rids - set(engine.results))
+                print(f"ERROR: drain incomplete — {len(missing)} requests "
+                      f"never retired: {missing[:8]}")
+                sys.exit(1)
         print(
             f"ttft p50 {s.ttft_percentile(50) * 1e3:.1f} ms, "
             f"p99 {s.ttft_percentile(99) * 1e3:.1f} ms"

@@ -1,7 +1,16 @@
 from .train import TrainLoopConfig, Trainer, SimulatedFailure
 from .serve import Server, ServeStats
-from .engine import BlockAllocator, PagedKVCache, StreamStats, StreamingEngine
+from .engine import (
+    BlockAllocator,
+    EngineStalled,
+    KVPoolExhausted,
+    PagedKVCache,
+    RequestResult,
+    StreamStats,
+    StreamingEngine,
+)
 from .background_tuner import BackgroundTuner
+from .chaos import ChaosError, ChaosInjector, ChaosStats
 
 __all__ = [
     "TrainLoopConfig",
@@ -10,8 +19,14 @@ __all__ = [
     "Server",
     "ServeStats",
     "BlockAllocator",
+    "EngineStalled",
+    "KVPoolExhausted",
     "PagedKVCache",
+    "RequestResult",
     "StreamStats",
     "StreamingEngine",
     "BackgroundTuner",
+    "ChaosError",
+    "ChaosInjector",
+    "ChaosStats",
 ]

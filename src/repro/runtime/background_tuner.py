@@ -104,6 +104,7 @@ class BackgroundTuner:
         self._cv = threading.Condition()
         self._inflight: set = set()  # BP fingerprints queued or tuning now
         self._failed: Dict[str, str] = {}  # fp -> label, search raised
+        self._quarantined: Dict[str, str] = {}  # fp -> label, candidates quarantined
         self._thread: Optional[threading.Thread] = None
         self.completed: List[Tuple[str, OpState]] = []
         self.errors: List[Tuple[str, BaseException]] = []
@@ -239,6 +240,19 @@ class BackgroundTuner:
             return sorted(self._failed.values())
 
     @property
+    def quarantined_labels(self) -> List[str]:
+        """Classes whose search quarantined at least one candidate.
+
+        The measurement guardrail (:meth:`~repro.core.tuner.Tuner.tune`)
+        marks candidates whose cost raised or came back non-finite; the
+        class itself may still have tuned fine on the surviving points.
+        Surfaced here (next to :attr:`failed_labels`) so the operator sees
+        broken candidates even when the search as a whole succeeded.
+        """
+        with self._cv:
+            return sorted(self._quarantined.values())
+
+    @property
     def background_evaluations(self) -> int:
         """Measured cost evaluations this tuner ran — all off the hot path."""
         return sum(state.cost_evaluations for _, state in self.completed)
@@ -286,6 +300,12 @@ class BackgroundTuner:
                         except BaseException as e:
                             self.errors.append((job.label, e))
             finally:
+                try:  # guardrail bookkeeping must not kill the worker either
+                    if job.op.db.quarantined(job.state.bp):
+                        with self._cv:
+                            self._quarantined[fp] = job.label
+                except BaseException:
+                    pass
                 with self._cv:
                     self._inflight.discard(fp)
                     self._cv.notify_all()

@@ -25,8 +25,8 @@ candidate family is the chunking **degree**, bracketed by the
 :class:`~repro.core.degree.DegreeController`'s set-on-entry/restore-on-exit
 protocol.  New here: the *scheduler itself* is a tuned kernel
 (``serve_scheduler``) — prefill chunk size, prefill/decode interleave ratio,
-admission policy and max in-flight form a
-:class:`~repro.core.params.ParamSpace` keyed per
+admission policy, max in-flight and (when the queue is bounded) the shed
+policy form a :class:`~repro.core.params.ParamSpace` keyed per
 :class:`~repro.core.traffic.TrafficClass` of the *queue state* (phase
 ``stream``), searched off the hot path by the
 :class:`~repro.runtime.background_tuner.BackgroundTuner` with a measured
@@ -43,12 +43,45 @@ MoE is the one asymmetry: capacity-bounded dispatch couples rows *within a
 prefill group* (prefill chunk pins to 1), but vmapped batch-1 decode rows
 are independent, so MoE decode chunks freely — a capability the static
 server never had.
+
+**Hardening** (PR 8, docs/serving.md failure-mode table).  By default
+(``hardened=True``) no input trace, resource state, or per-request failure
+crashes or wedges the engine; every request retires exactly once with a
+:class:`RequestResult` status in ``{ok, timed_out, shed, error}``:
+
+* **deadlines** — a request past its ``deadline_s`` (or the engine-level
+  ``default_ttl_s``) retires ``timed_out``, queued or in flight, instead of
+  holding a KV block;
+* **preemption with recompute** — when the pool is exhausted and a strictly
+  higher-priority admission is blocked, the lowest-priority in-flight
+  request is evicted: block released, requeued at the queue front with its
+  already-generated tokens as *replay* state.  On re-admission the prompt
+  prefills again and the replay tokens force the decode trajectory, so the
+  final output is bit-identical to the uninterrupted run; ``max_preemptions``
+  bounds re-eviction of the same request (anti-livelock);
+* **load shedding** — with ``queue_limit`` set, the queue is bounded by a
+  shed policy (``reject-new`` | ``drop-oldest`` | ``deadline-aware``) that
+  joins the tuned scheduler knobs;
+* **fault isolation** — a prefill/decode step that raises is retried one
+  request at a time; a request that still raises retires ``error`` (block
+  released) and the engine continues.  A watchdog counts scheduler
+  iterations with no retire/admit/decode progress and raises
+  :class:`EngineStalled` with a state dump after ``watchdog_limit`` of them
+  — loud failure instead of a silent spin;
+* **chaos** — :class:`~repro.runtime.chaos.ChaosInjector` hooks (step
+  faults, pool pressure, virtual delays) make every path above a
+  deterministic CI test.
+
+``hardened=False`` restores the pre-hardening contract (validation errors
+and step faults raise to the caller) — the overload benchmark runs that
+configuration against the same adversarial trace to demonstrate the crash
+the hardened engine survives.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +115,38 @@ from repro.runtime.serve import (
 
 
 # ---------------------------------------------------------------------------
+# Typed engine failures
+# ---------------------------------------------------------------------------
+
+
+class KVPoolExhausted(RuntimeError):
+    """The block pool has no free block.
+
+    Subclasses ``RuntimeError`` so pre-hardening callers (and tests) that
+    catch the bare exhaustion error keep working; carries the pool stats the
+    scheduler needs to decide between waiting, shedding, and preempting.
+    """
+
+    def __init__(self, n_blocks: int, in_use: int) -> None:
+        super().__init__(
+            f"KV block pool exhausted ({in_use}/{n_blocks} blocks in use); "
+            "the scheduler must bound admissions by allocator.free"
+        )
+        self.n_blocks = int(n_blocks)
+        self.in_use = int(in_use)
+
+    @property
+    def free(self) -> int:
+        return self.n_blocks - self.in_use
+
+
+class EngineStalled(RuntimeError):
+    """Watchdog: no retire/admit/decode progress for ``watchdog_limit``
+    consecutive scheduler iterations — fail loudly with a state dump
+    instead of spinning forever."""
+
+
+# ---------------------------------------------------------------------------
 # Paged KV cache
 # ---------------------------------------------------------------------------
 
@@ -106,15 +171,14 @@ class BlockAllocator:
 
     def allocate(self) -> int:
         if not self._free:
-            raise RuntimeError(
-                f"KV block pool exhausted ({self.n_blocks} blocks in use); "
-                "the scheduler must bound admissions by allocator.free"
-            )
+            raise KVPoolExhausted(self.n_blocks, self.in_use)
         block = self._free.pop()
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return block
 
     def release(self, block: int) -> None:
+        # the allocator stays strict (double-free of a *block* is always a
+        # bookkeeping bug); rid-level idempotence lives in PagedKVCache
         if not (0 <= block < self.n_blocks) or block in self._free:
             raise ValueError(f"release of invalid or free block {block}")
         self._free.append(block)
@@ -159,7 +223,13 @@ class PagedKVCache:
         return block
 
     def release(self, rid: int) -> None:
-        self.allocator.release(self.block_table.pop(rid))
+        """Release ``rid``'s block.  Idempotent: releasing a rid that holds
+        no block is a no-op, so every retirement path (finish, timeout,
+        shed, error, preempt) can release unconditionally without tracking
+        who already did."""
+        block = self.block_table.pop(rid, None)
+        if block is not None:
+            self.allocator.release(block)
 
     def block_of(self, rid: int) -> int:
         return self.block_table[rid]
@@ -211,6 +281,14 @@ class StreamStats:
     peak_in_flight: int = 0
     ttft_s: Dict[int, float] = field(default_factory=dict)
     finish_s: Dict[int, float] = field(default_factory=dict)
+    # hardening counters (all zero on a clean trace)
+    timeouts: int = 0            # requests retired past deadline
+    sheds: int = 0               # requests shed by admission control
+    errors: int = 0              # requests retired by fault isolation
+    duplicates: int = 0          # duplicate-rid arrivals ignored
+    preempted: int = 0           # KV-block evictions for priority admissions
+    step_faults: int = 0         # prefill/decode steps that raised
+    knob_faults: int = 0         # scheduler-knob resolutions that raised
 
     @property
     def tok_per_s(self) -> float:
@@ -223,6 +301,32 @@ class StreamStats:
 
 
 @dataclass
+class RequestResult:
+    """Terminal record of one request — exactly one per admitted rid."""
+
+    rid: int
+    status: str  # "ok" | "timed_out" | "shed" | "error"
+    tokens: List[int] = field(default_factory=list)  # delivered (may be partial)
+    detail: str = ""
+
+
+#: terminal statuses a request can retire with (the property-test alphabet)
+REQUEST_STATUSES = ("ok", "timed_out", "shed", "error")
+
+
+@dataclass
+class _Waiting:
+    """One queued request plus its hardening state."""
+
+    req: ServingRequest
+    # tokens already delivered before a preemption: on re-admission they
+    # force the decode trajectory (recompute), so output stays bit-identical
+    resume: List[int] = field(default_factory=list)
+    preemptions: int = 0
+    deadline: Optional[float] = None  # absolute virtual-clock deadline
+
+
+@dataclass
 class _Active:
     """One in-flight request: its block, generated tokens, current context."""
 
@@ -231,6 +335,9 @@ class _Active:
     gen: List[int]
     last_tok: int
     ctx: int  # tokens currently in the row's KV (plen + decodes done)
+    replay: List[int] = field(default_factory=list)  # forced recompute tokens
+    preemptions: int = 0
+    deadline: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -238,8 +345,20 @@ class _Active:
 # ---------------------------------------------------------------------------
 
 # scheduler-knob vocabulary: max requests per prefill group, decode
-# micro-steps per scheduler iteration, queue ordering, admission ceiling
-SCHED_KNOBS = ("prefill_chunk", "interleave", "admission", "max_in_flight")
+# micro-steps per scheduler iteration, queue ordering, admission ceiling,
+# bounded-queue shed policy
+SCHED_KNOBS = (
+    "prefill_chunk", "interleave", "admission", "max_in_flight", "shed_policy",
+)
+
+#: bounded-queue shed policies (the `shed_policy` knob's full domain)
+SHED_POLICIES = ("reject-new", "drop-oldest", "deadline-aware")
+
+# virtual-clock advance per no-progress iteration while the watchdog counts
+_STALL_TICK_S = 1e-3
+# shadow-replay cost penalty per shed request (keeps "shed everything"
+# from looking like a great makespan)
+_SHED_COST_S = 0.05
 
 
 class StreamingEngine:
@@ -249,6 +368,10 @@ class StreamingEngine:
     clock advances by each step's *measured* wall time and jumps over idle
     gaps, so time-to-first-token percentiles are deterministic-shaped and
     CI-safe (no sleeps) while still reflecting real step costs.
+
+    After ``serve`` returns, ``self.results`` maps every admitted rid to its
+    :class:`RequestResult`; the return value stays rid → tokens for the
+    ``ok`` subset (the pre-hardening contract).
     """
 
     def __init__(
@@ -262,7 +385,20 @@ class StreamingEngine:
         background_tuner: Optional[BackgroundTuner] = None,
         inline_tune: bool = False,
         device_key: bool = False,
+        hardened: bool = True,
+        queue_limit: Optional[int] = None,
+        shed_policy: Optional[str] = None,
+        default_ttl_s: Optional[float] = None,
+        max_preemptions: int = 3,
+        watchdog_limit: int = 200,
+        chaos: Any = None,
     ) -> None:
+        if shed_policy is not None and shed_policy not in SHED_POLICIES:
+            raise ValueError(
+                f"shed_policy must be one of {SHED_POLICIES}, got {shed_policy!r}"
+            )
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1")
         self.cfg = cfg
         self.params = params
         self.max_len = int(max_len)
@@ -271,9 +407,19 @@ class StreamingEngine:
         self.background = background_tuner
         self.inline_tune = inline_tune
         self.device_key = device_key
+        self.hardened = bool(hardened)
+        self.queue_limit = queue_limit
+        self.shed_policy = shed_policy  # pin; None lets the tuner choose
+        self.default_ttl_s = default_ttl_s
+        self.max_preemptions = int(max_preemptions)
+        self.watchdog_limit = int(watchdog_limit)
+        self.chaos = chaos
         self.cache = PagedKVCache(cfg, n_blocks, self.max_len)
         self.degree = DegreeController(max_degree=max(2, n_blocks))
         self.stats = StreamStats()
+        self.results: Dict[int, RequestResult] = {}
+        self.duplicate_rids: List[int] = []
+        self._delivered: Set[int] = set()
         self._hot_tuned: set = set()
 
         # raw jitted primitives (shared by hot path, candidates, and the
@@ -299,6 +445,15 @@ class StreamingEngine:
         self.prefill_op = self._make_prefill_op()
         self.decode_op = self._make_decode_op()
         self.sched_op = self._make_sched_op()
+        # last-resort knobs when the tuning path itself fails (hardened):
+        # sequential admission, full pool, no reordering, shed newest
+        self._fallback_knobs: Dict[str, Any] = {
+            "prefill_chunk": 1,
+            "interleave": 1,
+            "admission": "fcfs",
+            "max_in_flight": self.cache.n_blocks,
+            "shed_policy": self.shed_policy or "reject-new",
+        }
 
     # -- registry ops --------------------------------------------------------
 
@@ -425,11 +580,23 @@ class StreamingEngine:
         )
         if cfg.family == "moe":
             chunk_domain = (1,)  # grouped MoE prefill couples rows
+        if self.shed_policy is not None:
+            shed_domain: Tuple[str, ...] = (self.shed_policy,)
+        elif self.queue_limit is not None:
+            shed_domain = SHED_POLICIES
+        else:
+            # unbounded queue never sheds: a 1-point domain keeps the
+            # search product (and the measured shadow replays) small
+            shed_domain = ("reject-new",)
         space = ParamSpace([
             PerfParam("prefill_chunk", chunk_domain),
             PerfParam("interleave", (1, 2)),
             PerfParam("admission", ("fcfs", "sjf")),
-            PerfParam("max_in_flight", (n_blocks, max(1, n_blocks // 2))),
+            # dict.fromkeys dedupes while keeping order (a 1-block pool
+            # would otherwise produce the duplicate domain (1, 1))
+            PerfParam("max_in_flight",
+                      tuple(dict.fromkeys((n_blocks, max(1, n_blocks // 2))))),
+            PerfParam("shed_policy", shed_domain),
         ])
 
         def instantiate(point):
@@ -543,9 +710,9 @@ class StreamingEngine:
     # -- scheduling ----------------------------------------------------------
 
     def _knobs(
-        self, waiting: Sequence[ServingRequest], active: Dict[int, _Active]
+        self, waiting: Sequence[_Waiting], active: Dict[int, _Active]
     ) -> Dict[str, Any]:
-        pool = waiting or [a.req for a in active.values()]
+        pool = [w.req for w in waiting] or [a.req for a in active.values()]
         mean_plen = int(np.mean([len(r.prompt) for r in pool])) if pool else 1
         mean_mnt = int(np.mean([r.max_new_tokens for r in pool])) if pool else 1
         snapshot = {
@@ -556,15 +723,35 @@ class StreamingEngine:
         state = self._resolve(self.sched_op, snapshot)
         return dict(state.region.selected)
 
+    def _safe_knobs(
+        self, waiting: Sequence[_Waiting], active: Dict[int, _Active]
+    ) -> Dict[str, Any]:
+        """Hardened knob resolution: a raising or incomplete tuning path
+        degrades to the conservative fallback knobs, never crashes serving."""
+        if not self.hardened:
+            return self._knobs(waiting, active)
+        try:
+            knobs = self._knobs(waiting, active)
+        except Exception:
+            self.stats.knob_faults += 1
+            return dict(self._fallback_knobs)
+        if all(k in knobs for k in
+               ("prefill_chunk", "interleave", "admission", "max_in_flight")):
+            return knobs
+        self.stats.knob_faults += 1
+        return dict(self._fallback_knobs)
+
     def _pick_group(
         self,
-        waiting: List[ServingRequest],
+        waiting: List[_Waiting],
         active: Dict[int, _Active],
         knobs: Dict[str, Any],
-    ) -> List[ServingRequest]:
+    ) -> List[_Waiting]:
         """Pop the next prefill group: same exact prompt length (no padding
         → reference-exact logits), bounded by the chunk knob, the in-flight
-        ceiling, and the allocator's free blocks."""
+        ceiling, and the allocator's free blocks.  Higher priority admits
+        first; at equal priority the admission knob (fcfs/sjf) orders —
+        all-zero priorities reduce to the pre-hardening order exactly."""
         room = min(
             int(knobs["prefill_chunk"]),
             int(knobs["max_in_flight"]) - len(active),
@@ -575,36 +762,252 @@ class StreamingEngine:
         if knobs["admission"] == "sjf":
             order = sorted(
                 range(len(waiting)),
-                key=lambda i: (waiting[i].max_new_tokens, waiting[i].arrival_s,
-                               waiting[i].rid),
+                key=lambda i: (-waiting[i].req.priority,
+                               waiting[i].req.max_new_tokens,
+                               waiting[i].req.arrival_s,
+                               waiting[i].req.rid),
             )
-        else:  # fcfs — waiting is already arrival-ordered
-            order = list(range(len(waiting)))
-        lead_plen = len(waiting[order[0]].prompt)
+        else:  # fcfs — stable sort keeps queue order within a priority level
+            order = sorted(
+                range(len(waiting)), key=lambda i: -waiting[i].req.priority
+            )
+        lead_plen = len(waiting[order[0]].req.prompt)
         chosen = []
         for i in order:
             if len(chosen) >= room:
                 break
-            if len(waiting[i].prompt) == lead_plen:
+            if len(waiting[i].req.prompt) == lead_plen:
                 chosen.append(i)
         group = [waiting[i] for i in chosen]
         for i in sorted(chosen, reverse=True):
             del waiting[i]
         return group
 
+    # -- hardening helpers ---------------------------------------------------
+
+    def _deadline_of(self, r: ServingRequest) -> Optional[float]:
+        dl = getattr(r, "deadline_s", None)
+        if dl is not None:
+            return float(dl)
+        if self.default_ttl_s is not None:
+            return float(r.arrival_s) + float(self.default_ttl_s)
+        return None
+
+    def _retire(
+        self,
+        rid: int,
+        status: str,
+        tokens: Sequence[int],
+        now: float,
+        out: Dict[int, List[int]],
+        detail: str = "",
+    ) -> bool:
+        """Terminal bookkeeping for one request — idempotent: the first
+        retirement wins, every later attempt is a no-op.  Always releases
+        the rid's block (cache.release is rid-idempotent)."""
+        if rid in self.results:
+            return False
+        self.results[rid] = RequestResult(
+            rid=rid, status=status, tokens=list(tokens), detail=detail
+        )
+        self.cache.release(rid)
+        if status == "ok":
+            out[rid] = list(tokens)
+            self.stats.finish_s[rid] = now
+        elif status == "timed_out":
+            self.stats.timeouts += 1
+        elif status == "shed":
+            self.stats.sheds += 1
+        elif status == "error":
+            self.stats.errors += 1
+        return True
+
+    def _admit(
+        self,
+        r: ServingRequest,
+        seen: Set[int],
+        waiting: List[_Waiting],
+        out: Dict[int, List[int]],
+        now: float,
+    ) -> None:
+        """Hardened admission: malformed requests retire ``error`` on the
+        spot; duplicate rids are counted and ignored (the first occurrence
+        owns the rid's result slot)."""
+        rid = r.rid
+        if rid in seen:
+            self.duplicate_rids.append(rid)
+            self.stats.duplicates += 1
+            return
+        seen.add(rid)
+        plen = len(r.prompt)
+        mnt = int(r.max_new_tokens)
+        if plen < 1:
+            self._retire(rid, "error", [], now, out, detail="malformed: empty prompt")
+            return
+        if mnt < 1:
+            self._retire(
+                rid, "error", [], now, out,
+                detail=f"malformed: max_new_tokens {mnt} < 1",
+            )
+            return
+        need = plen + mnt - 1
+        if need > self.max_len:
+            self._retire(
+                rid, "error", [], now, out,
+                detail=(f"malformed: prompt {plen} + {mnt} new tokens needs "
+                        f"{need} KV slots > capacity {self.max_len}"),
+            )
+            return
+        waiting.append(_Waiting(req=r, deadline=self._deadline_of(r)))
+
+    def _expire_deadlines(
+        self,
+        waiting: List[_Waiting],
+        active: Dict[int, _Active],
+        out: Dict[int, List[int]],
+        now: float,
+    ) -> None:
+        for w in list(waiting):
+            if w.deadline is not None and now >= w.deadline:
+                waiting.remove(w)
+                self._retire(
+                    w.req.rid, "timed_out", w.resume, now, out,
+                    detail=f"deadline {w.deadline:.4f}s passed in queue",
+                )
+        for rid in list(active.keys()):
+            a = active[rid]
+            if a.deadline is not None and now >= a.deadline:
+                del active[rid]
+                self._retire(
+                    rid, "timed_out", a.gen, now, out,
+                    detail=f"deadline {a.deadline:.4f}s passed in flight",
+                )
+
+    def _shed(
+        self,
+        waiting: List[_Waiting],
+        out: Dict[int, List[int]],
+        now: float,
+        policy: str,
+    ) -> None:
+        while len(waiting) > self.queue_limit:
+            if policy == "drop-oldest":
+                i = 0
+            elif policy == "deadline-aware":
+                # least slack first: about to miss its deadline anyway;
+                # undeadlined requests (infinite slack) shed newest-first
+                i = min(
+                    range(len(waiting)),
+                    key=lambda j: (
+                        waiting[j].deadline if waiting[j].deadline is not None
+                        else float("inf"),
+                        -waiting[j].req.arrival_s,
+                        -waiting[j].req.rid,
+                    ),
+                )
+            else:  # reject-new
+                i = len(waiting) - 1
+            w = waiting.pop(i)
+            self._retire(
+                w.req.rid, "shed", w.resume, now, out,
+                detail=f"queue over limit {self.queue_limit} ({policy})",
+            )
+
+    def _maybe_preempt(
+        self, waiting: List[_Waiting], active: Dict[int, _Active]
+    ) -> bool:
+        """Evict the lowest-priority in-flight request when the pool is
+        exhausted and a strictly higher-priority admission is blocked.  The
+        victim requeues at the front with its generated tokens as replay
+        state; ``max_preemptions`` evictions make it non-evictable
+        (anti-livelock)."""
+        if not waiting or not active or self.cache.free > 0:
+            return False
+        cand_pri = max(int(w.req.priority) for w in waiting)
+        eligible = [
+            a for a in active.values() if a.preemptions < self.max_preemptions
+        ]
+        if not eligible:
+            return False
+        victim = min(
+            eligible,
+            key=lambda a: (int(a.req.priority), -a.req.arrival_s, -a.req.rid),
+        )
+        if cand_pri <= int(victim.req.priority):
+            return False
+        rid = victim.req.rid
+        del active[rid]
+        self.cache.release(rid)
+        waiting.insert(0, _Waiting(
+            req=victim.req,
+            resume=list(victim.gen),
+            preemptions=victim.preemptions + 1,
+            deadline=victim.deadline,
+        ))
+        self.stats.preempted += 1
+        return True
+
+    def _idle_advance(
+        self,
+        now: float,
+        reqs: Sequence[ServingRequest],
+        cursor: int,
+        waiting: Sequence[_Waiting],
+        active: Dict[int, _Active],
+    ) -> float:
+        """No progress this iteration (hardened): jump the virtual clock to
+        the nearest future event (arrival or deadline) so timeouts and
+        admissions stay reachable; a fixed tick when there is none."""
+        targets: List[float] = []
+        if cursor < len(reqs):
+            targets.append(reqs[cursor].arrival_s)
+        targets.extend(w.deadline for w in waiting if w.deadline is not None)
+        targets.extend(
+            a.deadline for a in active.values() if a.deadline is not None
+        )
+        future = [t for t in targets if t > now]
+        nxt = max(min(future) if future else now, now + _STALL_TICK_S)
+        self.stats.idle_s += nxt - now
+        return nxt
+
+    def _state_dump(
+        self,
+        waiting: Sequence[_Waiting],
+        active: Dict[int, _Active],
+        now: float,
+        idle_iters: int,
+    ) -> str:
+        return (
+            f"engine stalled: no progress for {idle_iters} iterations "
+            f"(watchdog_limit={self.watchdog_limit}) at t={now:.4f}s | "
+            f"waiting={[w.req.rid for w in waiting]} "
+            f"active={sorted(active)} "
+            f"free_blocks={self.cache.free}/{self.cache.n_blocks} "
+            f"block_table={dict(self.cache.block_table)} "
+            f"retired={len(self.results)} "
+            f"chaos_holding={getattr(self.chaos, 'holding', 0)}"
+        )
+
     # -- serve ---------------------------------------------------------------
 
     def serve(self, requests: Sequence[ServingRequest]) -> Dict[int, List[int]]:
-        """Greedy-decode an open-loop trace; returns rid → generated tokens."""
-        check_unique_rids(requests)
-        for r in requests:
-            need = len(r.prompt) + r.max_new_tokens - 1
-            if need > self.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {len(r.prompt)} + "
-                    f"{r.max_new_tokens} new tokens needs {need} KV slots "
-                    f"> capacity {self.max_len}"
-                )
+        """Greedy-decode an open-loop trace; returns rid → generated tokens
+        for the ``ok`` requests (``self.results`` has every terminal
+        status)."""
+        self.results = {}
+        self.duplicate_rids = []
+        self._delivered = set()
+        if not self.hardened:
+            # pre-hardening contract: malformed input raises to the caller
+            check_unique_rids(requests)
+            for r in requests:
+                need = len(r.prompt) + r.max_new_tokens - 1
+                if need > self.max_len:
+                    raise ValueError(
+                        f"request {r.rid}: prompt {len(r.prompt)} + "
+                        f"{r.max_new_tokens} new tokens needs {need} KV slots "
+                        f"> capacity {self.max_len}"
+                    )
         reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         out: Dict[int, List[int]] = {}
         if not reqs:
@@ -612,50 +1015,126 @@ class StreamingEngine:
         now = reqs[0].arrival_s
         t_start = now
         cursor = 0
-        waiting: List[ServingRequest] = []
+        waiting: List[_Waiting] = []
         active: Dict[int, _Active] = {}
+        seen: Set[int] = set()
+        idle_iters = 0
 
         while cursor < len(reqs) or waiting or active:
             while cursor < len(reqs) and reqs[cursor].arrival_s <= now:
-                waiting.append(reqs[cursor])
+                r = reqs[cursor]
                 cursor += 1
+                if self.hardened:
+                    self._admit(r, seen, waiting, out, now)
+                else:
+                    waiting.append(_Waiting(req=r))
+            if self.chaos is not None:
+                self.chaos.tick(self.cache)
+            if self.hardened:
+                self._expire_deadlines(waiting, active, out, now)
             if not waiting and not active:
-                # nothing runnable: the open-loop clock jumps to the next
-                # arrival instead of sleeping
-                self.stats.idle_s += reqs[cursor].arrival_s - now
-                now = reqs[cursor].arrival_s
-                continue
-            knobs = self._knobs(waiting, active)
+                if cursor < len(reqs):
+                    # nothing runnable: the open-loop clock jumps to the
+                    # next arrival instead of sleeping
+                    self.stats.idle_s += reqs[cursor].arrival_s - now
+                    now = reqs[cursor].arrival_s
+                    continue
+                break  # everything retired; chaos may still hold blocks
+            n_retired = len(self.results)
+            knobs = self._safe_knobs(waiting, active)
+            if self.hardened and self.queue_limit is not None:
+                policy = self.shed_policy or str(
+                    knobs.get("shed_policy", "reject-new")
+                )
+                self._shed(waiting, out, now, policy)
+            if self.hardened:
+                self._maybe_preempt(waiting, active)
 
             progressed = False
             group = self._pick_group(waiting, active, knobs)
             if group:
-                now = self._prefill_step(group, active, out, now)
+                now = self._prefill_step(group, active, waiting, out, now)
                 progressed = True
             for _ in range(int(knobs["interleave"])):
                 if not active:
                     break
                 now = self._decode_step(active, out, now)
                 progressed = True
-            if not progressed:
-                # waiting but no admission room and nothing decoding can
-                # only mean a stuck ceiling; active==∅ implies room ≥ 1
-                raise RuntimeError("scheduler stalled: no admissible work")
-            self.stats.peak_in_flight = max(self.stats.peak_in_flight, len(active))
+            if len(self.results) > n_retired:
+                progressed = True  # sheds/timeouts/errors are retirements
+            self.stats.peak_in_flight = max(
+                self.stats.peak_in_flight, len(active)
+            )
+            if progressed:
+                idle_iters = 0
+            else:
+                if not self.hardened:
+                    # waiting but no admission room and nothing decoding can
+                    # only mean a stuck ceiling; active==∅ implies room ≥ 1
+                    raise RuntimeError("scheduler stalled: no admissible work")
+                idle_iters += 1
+                if idle_iters > self.watchdog_limit:
+                    raise EngineStalled(
+                        self._state_dump(waiting, active, now, idle_iters)
+                    )
+                now = self._idle_advance(now, reqs, cursor, waiting, active)
+        if self.chaos is not None:
+            self.chaos.drain(self.cache)
         self.stats.makespan_s += now - t_start
         return out
 
+    # -- prefill -------------------------------------------------------------
+
     def _prefill_step(
         self,
-        group: List[ServingRequest],
+        group: List[_Waiting],
         active: Dict[int, _Active],
+        waiting: List[_Waiting],
         out: Dict[int, List[int]],
         now: float,
     ) -> float:
-        plen = len(group[0].prompt)
-        batch = build_batch_inputs(self.cfg, group, plen)
+        if not self.hardened:
+            return self._prefill_exec(group, active, waiting, out, now)
+        try:
+            return self._prefill_exec(group, active, waiting, out, now)
+        except Exception:
+            self.stats.step_faults += 1
+            # undo partial state: blocks allocated to members that never
+            # activated (cache.release is rid-idempotent)
+            for w in group:
+                if w.req.rid not in active:
+                    self.cache.release(w.req.rid)
+            # isolate: retry each not-yet-settled member on its own; a
+            # member that raises again is the implicated request
+            for w in group:
+                rid = w.req.rid
+                if (rid in self.results or rid in active
+                        or any(q.req.rid == rid for q in waiting)):
+                    continue
+                try:
+                    now = self._prefill_exec([w], active, waiting, out, now)
+                except Exception as exc:
+                    self._retire(
+                        rid, "error", w.resume, now, out,
+                        detail=f"prefill fault: {type(exc).__name__}: {exc}",
+                    )
+            return now
+
+    def _prefill_exec(
+        self,
+        group: List[_Waiting],
+        active: Dict[int, _Active],
+        waiting: List[_Waiting],
+        out: Dict[int, List[int]],
+        now: float,
+    ) -> float:
+        reqs = [w.req for w in group]
+        plen = len(reqs[0].prompt)
+        batch = build_batch_inputs(self.cfg, reqs, plen)
         pstate = self._resolve(self.prefill_op, self.params, batch)
         label = pstate.traffic.label if pstate.traffic else "prefill"
+        if self.chaos is not None:
+            self.chaos.before_step("prefill", [r.rid for r in reqs])
         t0 = time.perf_counter()
         with self.degree.region(label):
             logits, cache = pstate.region(self.params, batch)
@@ -664,44 +1143,103 @@ class StreamingEngine:
         self.stats.prefill_s += dt
         self.stats.prefill_steps += 1
         now += dt
+        if self.chaos is not None:
+            now += self.chaos.step_delay()
         if pstate.selector is not None and pstate.selector.observe(dt):
             self._on_tuned(pstate)
         toks = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        survivors: List[ServingRequest] = []
-        for i, r in enumerate(group):
-            self.stats.ttft_s[r.rid] = now - r.arrival_s
-            self.stats.tokens_out += 1
+        # a resumed (preempted) request forces its first delivered token:
+        # greedy decode reproduces it anyway, forcing guarantees bit-match
+        first_toks: Dict[int, int] = {}
+        for i, w in enumerate(group):
+            r = w.req
+            tok0 = int(w.resume[0]) if w.resume else int(toks[i])
+            first_toks[r.rid] = tok0
+            if r.rid not in self._delivered:
+                self._delivered.add(r.rid)
+                self.stats.ttft_s[r.rid] = now - r.arrival_s
+                self.stats.tokens_out += 1
             if r.max_new_tokens <= 1:
                 # done at first token: never allocates a block
-                out[r.rid] = [int(toks[i])]
-                self.stats.finish_s[r.rid] = now
-            else:
-                survivors.append(r)
-        if survivors:
-            for r in survivors:
-                self.cache.allocate(r.rid)
-            if len(survivors) < len(group):
-                # drop the retired rows before scattering into the pool
-                keep = np.asarray(
-                    [i for i, r in enumerate(group) if r.max_new_tokens > 1],
-                    np.int32,
+                self._retire(r.rid, "ok", [tok0], now, out)
+        keep_idx: List[int] = []
+        activated: List[_Waiting] = []
+        for i, w in enumerate(group):
+            if w.req.max_new_tokens <= 1:
+                continue
+            try:
+                self.cache.allocate(w.req.rid)
+            except KVPoolExhausted:
+                if not self.hardened:
+                    raise
+                # pool raced away (e.g. chaos squeeze between pick and
+                # allocate): requeue at the front with recompute state
+                resume = list(w.resume) if w.resume else [first_toks[w.req.rid]]
+                waiting.insert(0, _Waiting(
+                    req=w.req, resume=resume,
+                    preemptions=w.preemptions, deadline=w.deadline,
+                ))
+                continue
+            keep_idx.append(i)
+            activated.append(w)
+        if activated:
+            if len(keep_idx) < len(group):
+                # drop the retired/deferred rows before scattering
+                cache = _take_rows(cache, np.asarray(keep_idx, np.int32))
+            self.cache.insert([w.req.rid for w in activated], cache)
+            for w in activated:
+                r = w.req
+                tok0 = first_toks[r.rid]
+                active[r.rid] = _Active(
+                    req=r, block=self.cache.block_of(r.rid),
+                    gen=[tok0], last_tok=tok0, ctx=plen,
+                    replay=list(w.resume[1:]),
+                    preemptions=w.preemptions, deadline=w.deadline,
                 )
-                cache = _take_rows(cache, keep)
-            self.cache.insert([r.rid for r in survivors], cache)
-            for i, r in enumerate(group):
-                if r.max_new_tokens > 1:
-                    active[r.rid] = _Active(
-                        req=r, block=self.cache.block_of(r.rid),
-                        gen=[int(toks[i])], last_tok=int(toks[i]),
-                        ctx=plen,
-                    )
         return now
+
+    # -- decode --------------------------------------------------------------
 
     def _decode_step(
         self, active: Dict[int, _Active], out: Dict[int, List[int]], now: float
     ) -> float:
-        act = list(active.values())
+        if not self.hardened:
+            return self._decode_exec(active, out, now)
+        try:
+            return self._decode_exec(active, out, now)
+        except Exception:
+            self.stats.step_faults += 1
+            # isolate: step each row on its own; a row that raises again is
+            # the implicated request (its KV pool state is untouched — the
+            # jitted step is functional, the pool only swaps on success)
+            for rid in list(active.keys()):
+                if rid not in active:
+                    continue
+                try:
+                    now = self._decode_exec(active, out, now, only=[rid])
+                except Exception as exc:
+                    a = active.pop(rid)
+                    self._retire(
+                        rid, "error", a.gen, now, out,
+                        detail=f"decode fault: {type(exc).__name__}: {exc}",
+                    )
+            return now
+
+    def _decode_exec(
+        self,
+        active: Dict[int, _Active],
+        out: Dict[int, List[int]],
+        now: float,
+        only: Optional[Sequence[int]] = None,
+    ) -> float:
+        rids = [
+            r for r in (list(active.keys()) if only is None else only)
+            if r in active
+        ]
+        act = [active[r] for r in rids]
         A = len(act)
+        if A == 0:
+            return now
         bucket = bucket_pow2(A)
         # pad to the pow2 bucket by replicating row 0: replicas compute the
         # identical update, so duplicate scatter indices write equal values
@@ -716,6 +1254,8 @@ class StreamingEngine:
             len_hint,
         )
         label = dstate.traffic.label if dstate.traffic else "decode"
+        if self.chaos is not None:
+            self.chaos.before_step("decode", rids)
         t0 = time.perf_counter()
         with self.degree.region(label):
             new_tok, pool = dstate.region(
@@ -727,18 +1267,24 @@ class StreamingEngine:
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
         now += dt
+        if self.chaos is not None:
+            now += self.chaos.step_delay()
         if dstate.selector is not None and dstate.selector.observe(dt):
             self._on_tuned(dstate)
         new_np = np.asarray(new_tok)[:A]
         for a, t in zip(act, new_np):
-            a.gen.append(int(t))
-            a.last_tok = int(t)
+            if a.replay:
+                # recompute of an already-delivered token (post-preemption):
+                # force the original trajectory, don't re-count delivery
+                tok = int(a.replay.pop(0))
+            else:
+                tok = int(t)
+                self.stats.tokens_out += 1
+            a.gen.append(tok)
+            a.last_tok = tok
             a.ctx += 1
-            self.stats.tokens_out += 1
             if len(a.gen) >= a.req.max_new_tokens:
-                out[a.req.rid] = a.gen
-                self.stats.finish_s[a.req.rid] = now
-                self.cache.release(a.req.rid)
+                self._retire(a.req.rid, "ok", a.gen, now, out)
                 del active[a.req.rid]
         return now
 
@@ -749,8 +1295,9 @@ class StreamingEngine:
         shaped like the snapshot's traffic class through the raw jitted
         primitives (no op dispatch, no degree bracket, fresh pool) on a
         virtual clock.  Runs on the BackgroundTuner's worker thread; cost =
-        virtual makespan + p99 TTFT, so knobs that starve admissions or
-        waste decode slots both lose.
+        virtual makespan + p99 TTFT + a fixed penalty per shed request, so
+        knobs that starve admissions, waste decode slots, or shed their way
+        to a short makespan all lose.
         """
         plen = max(1, min(int(snapshot["mean_plen"]), self.max_len - 6))
         n = int(min(max(2, snapshot["waiting"]), 4))
@@ -763,10 +1310,38 @@ class StreamingEngine:
             prompt = rng.integers(
                 0, self.cfg.vocab_size - 1, size=plen
             ).astype(np.int32)
-            mini.append(ServingRequest(rid=i, prompt=prompt, max_new_tokens=mnt))
+            # alternating finite deadlines give the deadline-aware shed
+            # policy something to distinguish itself on
+            mini.append(ServingRequest(
+                rid=i, prompt=prompt, max_new_tokens=mnt,
+                deadline_s=0.05 * (i + 1) if i % 2 else None,
+            ))
 
         shadow = PagedKVCache(self.cfg, self.cache.n_blocks, self.max_len)
         waiting = list(mini)
+        shed = 0
+        if self.queue_limit is not None:
+            # bound the shadow queue below the mini-trace size so the shed
+            # policies produce genuinely different traces (and costs)
+            limit = max(1, min(int(self.queue_limit), n - 1))
+            policy = str(knobs.get("shed_policy", "reject-new"))
+            while len(waiting) > limit:
+                if policy == "drop-oldest":
+                    j = 0
+                elif policy == "deadline-aware":
+                    j = min(
+                        range(len(waiting)),
+                        key=lambda q: (
+                            waiting[q].deadline_s
+                            if waiting[q].deadline_s is not None
+                            else float("inf"),
+                            -waiting[q].rid,
+                        ),
+                    )
+                else:  # reject-new
+                    j = len(waiting) - 1
+                waiting.pop(j)
+                shed += 1
         active: Dict[int, _Active] = {}
         now = 0.0
         ttft: List[float] = []
@@ -828,7 +1403,7 @@ class StreamingEngine:
                         shadow.release(a.req.rid)
                         del active[a.req.rid]
         p99 = float(np.percentile(np.asarray(ttft), 99)) if ttft else 0.0
-        return now + p99
+        return now + p99 + _SHED_COST_S * shed
 
 
 # ---------------------------------------------------------------------------

@@ -127,6 +127,21 @@ def check_unique_rids(requests: Sequence[ServingRequest]) -> None:
         seen.add(r.rid)
 
 
+def check_well_formed(requests: Sequence[ServingRequest]) -> None:
+    """The static server's strict contract: a malformed request is a caller
+    bug and fails fast with a named reason instead of an opaque shape error
+    deep inside a jitted prefill.  (The hardened StreamingEngine instead
+    absorbs these per-request with an ``error`` retirement.)"""
+    for r in requests:
+        if len(r.prompt) < 1:
+            raise ValueError(f"request {r.rid}: empty prompt")
+        if r.max_new_tokens < 1:
+            raise ValueError(
+                f"request {r.rid}: max_new_tokens must be >= 1, "
+                f"got {r.max_new_tokens}"
+            )
+
+
 def build_batch_inputs(
     cfg: ModelConfig, group: Sequence[ServingRequest], plen: int
 ) -> Dict[str, Any]:
@@ -488,6 +503,7 @@ class Server:
     def run(self, requests: Sequence[ServingRequest]) -> Dict[int, List[int]]:
         """Greedy-decode every request; returns rid -> generated token ids."""
         check_unique_rids(requests)
+        check_well_formed(requests)
         out: Dict[int, List[int]] = {}
         for i in range(0, len(requests), self.batch_size):
             real = list(requests[i : i + self.batch_size])

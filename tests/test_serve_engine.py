@@ -103,9 +103,32 @@ def test_duplicate_rid_rejected(smoke_params):
         check_unique_rids(reqs)
     with pytest.raises(ValueError, match="duplicate request rid"):
         Server(SMOKE, smoke_params, batch_size=2).run(reqs)
-    eng = StreamingEngine(SMOKE, smoke_params, n_blocks=2, max_len=16)
+    # the un-hardened engine keeps the strict upfront contract
+    eng = StreamingEngine(SMOKE, smoke_params, n_blocks=2, max_len=16,
+                          hardened=False)
     with pytest.raises(ValueError, match="duplicate request rid"):
         eng.serve(reqs)
+    # the hardened default absorbs the duplicate: the first wins, the
+    # duplicate is recorded for the operator and never double-served
+    eng = StreamingEngine(SMOKE, smoke_params, n_blocks=2, max_len=16)
+    out = eng.serve(reqs)
+    assert list(out) == [reqs[0].rid]
+    assert eng.duplicate_rids == [reqs[0].rid]
+    assert eng.stats.duplicates == 1
+
+
+def test_server_rejects_malformed_request(smoke_params):
+    """The static server's strict contract: named errors, not jit shape
+    explosions (the hardened engine absorbs the same inputs per-request)."""
+    srv = Server(SMOKE, smoke_params, batch_size=1)
+    empty = synthetic_requests(SMOKE, 1, prompt_len=4, max_new_tokens=2)
+    empty[0].prompt = empty[0].prompt[:0]
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.run(empty)
+    zero = synthetic_requests(SMOKE, 1, prompt_len=4, max_new_tokens=2)
+    zero[0].max_new_tokens = 0
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.run(zero)
 
 
 def test_server_exact_decode_count_and_tokens(smoke_params):
@@ -178,10 +201,20 @@ def test_engine_matches_sequential_vlm():
 
 
 def test_engine_rejects_overlong_request(smoke_params):
-    eng = StreamingEngine(SMOKE, smoke_params, n_blocks=2, max_len=8)
     bad = synthetic_requests(SMOKE, 1, prompt_len=6, max_new_tokens=4)
+    # un-hardened: overlong is a caller bug and raises upfront
+    eng = StreamingEngine(SMOKE, smoke_params, n_blocks=2, max_len=8,
+                          hardened=False)
     with pytest.raises(ValueError, match="KV slots"):
         eng.serve(bad)
+    # hardened: per-request validation retires it with ``error`` status
+    # instead of taking the whole trace down
+    eng = StreamingEngine(SMOKE, smoke_params, n_blocks=2, max_len=8)
+    out = eng.serve(bad)
+    assert out == {}
+    res = eng.results[bad[0].rid]
+    assert res.status == "error" and "malformed" in res.detail
+    assert eng.stats.errors == 1
 
 
 # ---------------------------------------------------------------------------
