@@ -21,6 +21,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from . import (
         bench_dispatch,
+        bench_emit_space,
         bench_fig11_loop_exchange,
         bench_fig12_degree_switch,
         bench_fig13_14_combined,
@@ -45,6 +46,7 @@ def main() -> None:
         bench_serve_stream,
         bench_serve_overload,
         bench_tune_throughput,
+        bench_emit_space,
         bench_fleet_tune,
         bench_fleet_service,
         bench_train_step,

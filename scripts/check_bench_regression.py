@@ -33,14 +33,21 @@ checks three gates against ``benchmarks/baselines/``:
 * **fleet_tune.json** — the sharded fleet search (``fleet_tune/summary``)
   must report identical winners to single-process on every kernel, full
   space coverage, and balanced shards; the wall-clock speedup ratio is
-  gated (``min_speedup_full``) only on full (non ``BENCH_FAST``) records,
-  where the timing is meaningful;
+  gated (``min_speedup_full``) only on full (non ``BENCH_FAST``) records
+  from multi-core hosts, where the timing is meaningful;
 * **fleet_service.json** — the global tuning service
   (``fleet_service/summary``): the 2-host remote fleet over a seeded
   lossy transport must converge to final-best entries byte-identical to
   the single-process run, a fresh host must adopt the final with
   ``hot_evals=0``, and the injected-fault schedule must be non-trivial
-  (``min_faults``/``min_partitions``/``min_healed``).
+  (``min_faults``/``min_partitions``/``min_healed``);
+* **emit_space.json** — the arch-model-emitted candidate spaces
+  (``emit_space/summary``): on every kernel the emitted space must cover
+  the frozen hand ladder (superset), pick a winner no worse than the best
+  hand point under the kernel's deterministic model cost, tune within the
+  staged measured-eval budget, and emit byte-identical space signatures
+  across repeats; total emitted points are floored at
+  ``min_emitted_points``.
 
 Every gated quantity is either a deterministic count/flag or a
 back-to-back ratio of like timings, so none of the gates flake on machine
@@ -316,7 +323,12 @@ def check_fleet_tune(record: dict, problems: list) -> str:
     if baseline.get("require_balanced", True) and fields.get("balanced") != "1":
         problems.append("fleet_tune: shard sizes differ by more than one")
     speedup = float(fields.get("speedup", 0.0))
-    if not record.get("fast"):
+    # the thread fleet overlaps XLA compilation across cores, so the
+    # wall-clock gate only means something with real parallel headroom:
+    # skip it on single-core runners (cores recorded by the bench; absent
+    # in pre-PR-9 records, where multi-core is assumed as before)
+    cores = int(fields.get("cores", 2))
+    if not record.get("fast") and cores > 1:
         floor = float(baseline.get("min_speedup_full", 1.0))
         if speedup < floor:
             problems.append(
@@ -383,6 +395,41 @@ def check_fleet_service(record: dict, problems: list) -> str:
             f"{fields.get('retries')} retries, hot path clean")
 
 
+def check_emit_space(record: dict, problems: list) -> str:
+    with open(BASELINES / "emit_space.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "emit_space/summary")
+    if fields is None:
+        problems.append("emit_space: no emit_space/summary row in record")
+        return "emit_space: missing"
+    kernels = int(fields.get("kernels", 0))
+    want = int(baseline.get("kernels", 5))
+    if kernels < want:
+        problems.append(
+            f"emit_space: only {kernels} kernel(s) emitted (need >= {want})"
+        )
+    for flag, req_key in (("superset", "require_superset_all"),
+                          ("winner_le", "require_winner_le_all"),
+                          ("inbudget", "require_inbudget_all"),
+                          ("deterministic", "require_deterministic_all")):
+        if baseline.get(req_key, True) and int(fields.get(flag, 0)) < kernels:
+            problems.append(
+                f"emit_space: {flag} held on only {fields.get(flag)}/{kernels} "
+                "kernels (the arch-model spaces must cover the hand ladders, "
+                "never pick a worse winner, stay in the staged eval budget, "
+                "and emit reproducibly)"
+            )
+    emitted = int(fields.get("emitted_points", 0))
+    floor = int(baseline.get("min_emitted_points", 1))
+    if emitted < floor:
+        problems.append(
+            f"emit_space: emitted spaces shrank to {emitted} total points "
+            f"(baseline floor {floor}) — the arch model lost coverage"
+        )
+    return (f"emit_space: {emitted} emitted vs {fields.get('hand_points')} "
+            f"hand points across {kernels} kernels, all gates held")
+
+
 def main() -> int:
     bench_path = Path(
         sys.argv[1] if len(sys.argv) > 1
@@ -406,6 +453,7 @@ def main() -> int:
         check_serve_overload(record, problems),
         check_fleet_tune(record, problems),
         check_fleet_service(record, problems),
+        check_emit_space(record, problems),
     ]
 
     for p in problems:

@@ -26,6 +26,7 @@ The fleet control plane — device fingerprints, sharded N-worker search,
 drift-aware canary re-tuning — lives in :mod:`repro.fleet` (docs/fleet.md)
 and layers on this package without adding anything to its import cost.
 """
+from .arch import ArchSpec, arch_bp_entries, default_interpret, local_arch
 from .cost import (
     FX100,
     TPU_V5E,
@@ -42,6 +43,15 @@ from .cost import (
 )
 from .db import TuningDB
 from .degree import DegreeController
+from .emit import (
+    EmitPolicy,
+    EmittedSpace,
+    TileDim,
+    TilePolicy,
+    hint_prescreen,
+    pow2_ladder,
+    space_signature,
+)
 from .exchange import (
     GKV_FIGURE_OF_VARIANT,
     ExchangeVariant,
@@ -49,7 +59,14 @@ from .exchange import (
     enumerate_exchange_variants,
 )
 from .autotuned import AutotunedOp, OpState
-from .params import BasicParams, ParamSpace, PerfParam, pp_key, project_point
+from .params import (
+    BasicParams,
+    EmptySpace,
+    ParamSpace,
+    PerfParam,
+    pp_key,
+    project_point,
+)
 from .program import (
     JointSearch,
     ProgramMember,
@@ -91,11 +108,23 @@ __all__ = [
     "kernel_names",
     "register_kernel",
     "BasicParams",
+    "EmptySpace",
     "ParamSpace",
     "PerfParam",
     "pp_key",
     "project_point",
     "ATRegion",
+    "ArchSpec",
+    "arch_bp_entries",
+    "default_interpret",
+    "local_arch",
+    "EmitPolicy",
+    "EmittedSpace",
+    "TileDim",
+    "TilePolicy",
+    "hint_prescreen",
+    "pow2_ladder",
+    "space_signature",
     "LoopNest",
     "ExchangeVariant",
     "enumerate_exchange_variants",

@@ -328,7 +328,8 @@ class AutotunedOp:
             return
         if not (state.from_cache or state.tuned):
             return
-        if self.db.tuned_point(state.bp) is None:
+        sig = getattr(state.region, "space_signature", None)
+        if self.db.tuned_point(state.bp, space_signature=sig) is None:
             return  # interim winner (budget-capped sweep): not final yet
         self.finalize(state, *args, **kwargs)
 
@@ -453,7 +454,13 @@ class AutotunedOp:
     ) -> OpState:
         region = self.spec.make_region(bp)
         state = OpState(bp=bp, region=region)
-        tuned = self.db.tuned_point(bp)
+        sig = getattr(region, "space_signature", None)
+        if sig is not None:
+            # emitted region: a final recorded under a different emission
+            # (changed arch model / emit policy) is stale — demote it and
+            # drop its trials so the search below starts clean
+            self.db.invalidate_stale_final(bp, sig)
+        tuned = self.db.tuned_point(bp, space_signature=sig)
         if tuned is not None:
             region.select(tuned)
             state.from_cache = True

@@ -156,7 +156,8 @@ class TuningDB:
             self._flush()
 
     def record_best(
-        self, bp: BasicParams, point: Mapping[str, Any], cost: float, layer: str
+        self, bp: BasicParams, point: Mapping[str, Any], cost: float, layer: str,
+        space_signature: Optional[str] = None,
     ) -> None:
         """Record the argmin of a *completed* search.
 
@@ -164,6 +165,12 @@ class TuningDB:
         this call marks the entry ``final`` — the registry's zero-re-tune
         fast path (``tuned_point``) trusts finals only, so an interrupted or
         budget-capped sweep resumes instead of freezing its interim winner.
+
+        ``space_signature`` stamps the final with the emitted-space content
+        hash it was searched under (core/emit.py); ``tuned_point`` callers
+        that pass their current signature then refuse finals from a
+        different emission — a changed arch model re-tunes instead of
+        recalling a winner from a space that no longer exists.
         """
         if not math.isfinite(cost):
             raise ValueError(
@@ -172,7 +179,10 @@ class TuningDB:
             )
         with self._lock:
             entry = self._entry(bp, layer)
-            entry["best"] = {"point": dict(point), "cost": cost, "final": True}
+            best = {"point": dict(point), "cost": cost, "final": True}
+            if space_signature is not None:
+                best["space_sig"] = str(space_signature)
+            entry["best"] = best
             self._flush()
 
     def record_quarantine(
@@ -286,17 +296,69 @@ class TuningDB:
             return dict(entry["best"]["point"])
         return None
 
-    def tuned_point(self, bp: BasicParams) -> Optional[Dict[str, Any]]:
+    def tuned_point(
+        self, bp: BasicParams, space_signature: Optional[str] = None
+    ) -> Optional[Dict[str, Any]]:
         """The best point, only if it came from a completed search and has
         not been quarantined (a merge can carry in a foreign final whose
-        point a later measurement quarantined — distrust wins)."""
+        point a later measurement quarantined — distrust wins).
+
+        When the caller passes its current emitted-space ``space_signature``,
+        the final must carry the *same* signature to be trusted: a final
+        recorded under a different (or no) signature was searched over a
+        space that no longer exists, so recalling it would freeze a winner
+        the current arch model may not even emit.  ``None`` keeps the
+        legacy behaviour for hand-built spaces.
+        """
         entry = self._data.get(bp.fingerprint())
         if entry and entry.get("best") and entry["best"].get("final"):
-            point = entry["best"]["point"]
+            best = entry["best"]
+            if (space_signature is not None
+                    and best.get("space_sig") != space_signature):
+                return None
+            point = best["point"]
             if pp_key(point) in entry.get("quarantined", {}):
                 return None
             return dict(point)
         return None
+
+    def space_signature(self, bp: BasicParams) -> Optional[str]:
+        """The emitted-space signature the recorded final was searched under."""
+        entry = self._data.get(bp.fingerprint())
+        if entry and entry.get("best"):
+            sig = entry["best"].get("space_sig")
+            return None if sig is None else str(sig)
+        return None
+
+    def invalidate_stale_final(
+        self, bp: BasicParams, space_signature: str
+    ) -> bool:
+        """Demote a final whose emitted-space signature no longer matches.
+
+        The arch model changed (or the emit policy did), so the recorded
+        winner came from a space that is no longer the one being tuned:
+        strip the ``final`` flag, drop the stale trials (they would poison
+        warm starts and runtime re-ranking with points the new space may
+        not contain), and append a ``space_invalidated`` audit event.
+        Returns True when a stale final was actually invalidated.
+        """
+        with self._lock:
+            entry = self._data.get(bp.fingerprint())
+            best = entry.get("best") if entry else None
+            if not best or not best.get("final"):
+                return False
+            old_sig = best.get("space_sig")
+            if old_sig == space_signature:
+                return False
+            best.pop("final", None)
+            best["demoted"] = True
+            entry["trials"] = {}
+            self._flush()
+        self.record_event(
+            bp, "space_invalidated",
+            old_sig=old_sig, new_sig=space_signature,
+        )
+        return True
 
     def quarantined(self, bp: BasicParams) -> Dict[str, Dict[str, Any]]:
         """The quarantine markers for this entry (pp_key → record)."""

@@ -116,21 +116,62 @@ class PerfParam:
             raise ValueError(f"PerfParam {self.name!r} has duplicate candidates")
 
 
+class EmptySpace(ValueError):
+    """A ParamSpace whose constraint rejects every cartesian point.
+
+    Raised at construction (and by ``default()``/``shard()`` as a backstop)
+    so an over-tight constraint — e.g. an emitted VMEM budget smaller than
+    any candidate tile — fails where the space is built, naming the
+    constraint and the architecture values, instead of surfacing as a
+    confusing downstream search failure.
+    """
+
+    def __init__(self, message: str, label=None, context=None) -> None:
+        super().__init__(message)
+        self.label = label
+        self.context = dict(context or {})
+
+
+# Constructor-time emptiness is only provable by enumerating the whole
+# cartesian product; past this many probes we defer to default()/points().
+_EMPTY_PROBE_CAP = 4096
+
+
 class ParamSpace:
     """The cartesian PP space plus an optional feasibility predicate.
 
     ``constraint(point) -> bool`` prunes infeasible combinations (e.g. a
     Pallas block shape whose VMEM footprint exceeds budget — the TPU version
-    of "don't give each thread 2 iterations").
+    of "don't give each thread 2 iterations").  ``label``/``context`` name
+    the space and the values its constraint was derived from; both ride
+    along on the :class:`EmptySpace` error when nothing survives.
     """
 
-    def __init__(self, params: Sequence[PerfParam], constraint=None) -> None:
+    def __init__(
+        self, params: Sequence[PerfParam], constraint=None,
+        label: str = None, context: Mapping[str, Any] = None,
+    ) -> None:
         names = [p.name for p in params]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate PerfParam names: {names}")
         self.params: Tuple[PerfParam, ...] = tuple(params)
         self.constraint = constraint
+        self.label = label
+        self.context = dict(context or {})
         self._members: Any = None  # explicit enumeration (see subset())
+        if constraint is not None and self.size() <= _EMPTY_PROBE_CAP:
+            for _ in self.points():
+                break
+            else:
+                raise self._empty_error()
+
+    def _empty_error(self) -> "EmptySpace":
+        what = self.label or "ParamSpace"
+        msg = f"{what}: constraint rejects all {self.size()} candidate points"
+        if self.context:
+            ctx = ", ".join(f"{k}={v}" for k, v in sorted(self.context.items()))
+            msg += f" ({ctx})"
+        return EmptySpace(msg, label=self.label, context=self.context)
 
     @property
     def names(self) -> Tuple[str, ...]:
@@ -165,7 +206,7 @@ class ParamSpace:
         """First feasible point — the untuned baseline."""
         for point in self.points():
             return point
-        raise ValueError("ParamSpace has no feasible point")
+        raise self._empty_error()
 
     def subset(self, points: Sequence[Mapping[str, Any]]) -> "ParamSpace":
         """A space restricted to an explicit candidate list.
@@ -211,7 +252,7 @@ class ParamSpace:
                              "expected 'stride' or 'block'")
         points = [dict(p) for p in self.points()]
         if not points:
-            raise ValueError("ParamSpace has no feasible point to shard")
+            raise self._empty_error()
         if policy == "stride":
             groups = [points[i::n] for i in range(n)]
         else:

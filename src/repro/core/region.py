@@ -38,11 +38,20 @@ class ATRegion:
         space: ParamSpace,
         instantiate: Callable[[Mapping[str, Any]], Callable[..., Any]],
         oracle: Optional[Callable[..., Any]] = None,
+        space_signature: Optional[str] = None,
+        hints: Optional[Mapping[str, Mapping[str, Any]]] = None,
+        arch: Optional[Any] = None,
     ) -> None:
         self.name = name
         self.space = space
         self.instantiate = instantiate
         self.oracle = oracle
+        # emitted-space provenance (core/emit.py): the signature gates DB
+        # final recall — a region whose space was emitted under a different
+        # arch model must re-tune, not silently recall the stale winner
+        self.space_signature = space_signature
+        self.hints = dict(hints) if hints else None
+        self.arch = arch
         self.selected: Dict[str, Any] = space.default()
         self._compiled: Dict[str, Callable[..., Any]] = {}
         # bumped on every (re-)selection and invalidation: dispatch fast

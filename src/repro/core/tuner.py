@@ -125,7 +125,10 @@ class Tuner:
                 "quarantined (raising or non-finite cost)"
             )
         if finalize:
-            self.db.record_best(bp, result.best.point, result.best.cost, layer)
+            self.db.record_best(
+                bp, result.best.point, result.best.cost, layer,
+                space_signature=getattr(region, "space_signature", None),
+            )
         if select:
             region.select(result.best.point)
         return result

@@ -186,7 +186,8 @@ class DriftMonitor:
     @staticmethod
     def _recorded_final_cost(op: AutotunedOp, state: OpState) -> Optional[float]:
         """The recorded cost of this class's *final* best, if one is live."""
-        if op.db.tuned_point(state.bp) is None:
+        sig = getattr(state.region, "space_signature", None)
+        if op.db.tuned_point(state.bp, space_signature=sig) is None:
             return None
         return op.db.best_cost(state.bp)
 

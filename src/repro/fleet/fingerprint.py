@@ -102,6 +102,20 @@ class DeviceFingerprint:
             f"/v{self.schema}"
         )
 
+    def arch_spec(self):
+        """The architecture model for this device's backend.
+
+        The :class:`~repro.core.arch.ArchSpec` is the *emit-layer* view of
+        the same machine this fingerprint identifies: the fingerprint keys
+        DB entries, the arch spec generates the candidate spaces searched
+        under those keys (docs/arch.md).  Its ``arch_``-prefixed
+        ``bp_entries()`` compose with these ``device_`` entries, so emitted
+        spaces are namespaced per architecture fleet-wide.
+        """
+        from repro.core.arch import detect
+
+        return detect(self.backend)
+
 
 def _host_memory_gib() -> float:
     """Total host memory in GiB; 1.0 when undetectable (still deterministic)."""

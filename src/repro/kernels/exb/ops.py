@@ -1,28 +1,24 @@
 """Jitted wrapper + AT region for the exb Pallas kernel.
 
 ``exb_region()`` brackets the kernel's (block_iv, block_iz) family exactly
-like the paper brackets the Fortran loop nest — same ParamSpace machinery,
-with a VMEM-feasibility constraint standing in for "enough iterations per
-thread" (docs/design.md §2), and an analytic cost model for install-time AT on a
-host without the target hardware.
+like the paper brackets the Fortran loop nest — the candidate family is
+emitted from the architecture model (core/emit.py), with a VMEM-feasibility
+constraint standing in for "enough iterations per thread" (docs/design.md
+§2), and an analytic cost model for install-time AT on a host without the
+target hardware.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Mapping
+from typing import Any, Dict, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    ATRegion,
-    BasicParams,
-    KernelSpec,
-    ParamSpace,
-    PerfParam,
-    register_kernel,
-)
+from repro.core import ATRegion, BasicParams, KernelSpec, register_kernel
+from repro.core.arch import ArchSpec, default_interpret, local_arch
 from repro.core.cost import TPU_V5E, HardwareSpec
+from repro.core.emit import TileDim, TilePolicy
 
 from .exb import exb_pallas, vmem_bytes
 from .ref import exb_ref
@@ -30,27 +26,54 @@ from .ref import exb_ref
 
 @functools.partial(jax.jit, static_argnames=("block_iv", "block_iz", "interpret"))
 def exb(inp: Dict[str, jnp.ndarray], block_iv: int = 1, block_iz: int = 16,
-        interpret: bool = True):
+        interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
     return exb_pallas(inp, block_iv=block_iv, block_iz=block_iz, interpret=interpret)
 
 
-def exb_region(dims=(16, 16, 128, 65), vmem_budget: int = 16 * 2**20) -> ATRegion:
+def _traffic(bp: Mapping[str, Any], point: Mapping[str, Any]):
+    iv, iz, mx, my = bp["iv"], bp["iz"], bp["mx"], bp["my"]
+    flops = 24.0 * iv * iz * mx * my
+    # 3-D fields are re-streamed once per iv-block row (index_map reuse)
+    bytes_ = 6.0 * iv * iz * mx * my * 4 \
+        + 8.0 * iz * mx * my * 4 * (iv // point["block_iv"])
+    return flops, bytes_
+
+
+EXB_POLICY = TilePolicy(
+    kernel="exb",
+    dims=lambda bp: (
+        TileDim("block_iv", bp["iv"], semantic="grid"),
+        TileDim("block_iz", bp["iz"], semantic="grid"),
+    ),
+    vmem_model=lambda bp, p: vmem_bytes(
+        p["block_iv"], p["block_iz"], bp["mx"], bp["my"]
+    ),
+    traffic_model=_traffic,
+)
+
+
+def exb_region(
+    dims=(16, 16, 128, 65), vmem_budget: Optional[int] = None,
+    arch: Optional[ArchSpec] = None,
+    pinned: Sequence[Mapping[str, Any]] = (),
+) -> ATRegion:
     iv, iz, mx, my = dims
-    divisors = lambda n: tuple(d for d in (1, 2, 4, 8, 16, 32) if n % d == 0 and d <= n)
-    space = ParamSpace(
-        [
-            PerfParam("block_iv", divisors(iv)),
-            PerfParam("block_iz", divisors(iz)),
-        ],
-        constraint=lambda p: vmem_bytes(p["block_iv"], p["block_iz"], mx, my)
-        <= vmem_budget,
+    arch = arch or local_arch()
+    emitted = EXB_POLICY.emit(
+        arch, {"iv": iv, "iz": iz, "mx": mx, "my": my},
+        pinned=pinned, vmem_budget=vmem_budget,
     )
 
     def instantiate(point: Mapping[str, Any]):
         biv, biz = point["block_iv"], point["block_iz"]
         return lambda inp: exb(inp, block_iv=biv, block_iz=biz)
 
-    return ATRegion("exb_pallas", space, instantiate, oracle=exb_ref)
+    return ATRegion(
+        "exb_pallas", emitted.space, instantiate, oracle=exb_ref,
+        space_signature=emitted.signature, hints=emitted.hints, arch=arch,
+    )
 
 
 def analytic_cost(

@@ -40,6 +40,7 @@ def _flash_kernel(
     block_q: int,
     block_kv: int,
     nkv: int,
+    seq_len: int,
 ):
     qi = pl.program_id(2)
     kj = pl.program_id(3)
@@ -54,6 +55,11 @@ def _flash_kernel(
     k = k_ref[0, :, 0, :]  # (bkv, hd)
     v = v_ref[0, :, 0, :]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if nkv * block_kv > seq_len:
+        # padded tail block: keys past the real sequence must not score
+        col = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1) \
+            + kj * block_kv
+        s = jnp.where(col < seq_len, s, NEG_INF)
     if causal:
         off = qi * block_q - kj * block_kv
         mask = (
@@ -92,9 +98,17 @@ def flash_attention(
     KV = k.shape[2]
     G = H // KV
     bq, bkv = min(block_q, S), min(block_kv, S)
-    if S % bq or S % bkv:
-        raise ValueError(f"seq {S} must divide blocks ({bq},{bkv})")
-    nq, nkv = S // bq, S // bkv
+    # non-dividing blocks tile past the sequence edge: pad q rows and kv
+    # columns up to whole blocks (the kernel masks tail keys to NEG_INF;
+    # tail query rows are garbage and sliced off below)
+    nq, nkv = -(-S // bq), -(-S // bkv)
+    Sq, Skv = nq * bq, nkv * bkv
+    if Sq != S:
+        q = jnp.pad(q, ((0, 0), (0, Sq - S), (0, 0), (0, 0)))
+    if Skv != S:
+        pad_kv = ((0, 0), (0, Skv - S), (0, 0), (0, 0))
+        k = jnp.pad(k, pad_kv)
+        v = jnp.pad(v, pad_kv)
     grid = (B, H, nq, nkv)
 
     q_spec = pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0))
@@ -108,13 +122,14 @@ def flash_attention(
         block_q=bq,
         block_kv=bkv,
         nkv=nkv,
+        seq_len=S,
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[q_spec, kv_spec, kv_spec],
         out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
         scratch_shapes=[
             _scratch((bq,), jnp.float32),
             _scratch((bq,), jnp.float32),
@@ -122,6 +137,7 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :S] if Sq != S else out
 
 
 def _scratch(shape, dtype):

@@ -2,12 +2,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Mapping
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 
-from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
-from repro.core.cost import roofline_prescreen
+from repro.core import ATRegion, BasicParams, KernelSpec, register_kernel
+from repro.core.arch import ArchSpec, default_interpret, local_arch
+from repro.core.emit import TileDim, TilePolicy, hint_prescreen
 
 from .flash_attention import flash_attention, vmem_bytes
 from .ref import attention_ref
@@ -17,30 +18,56 @@ from .ref import attention_ref
     jax.jit, static_argnames=("block_q", "block_kv", "causal", "interpret")
 )
 def attention(q, k, v, block_q: int = 512, block_kv: int = 512,
-              causal: bool = True, interpret: bool = True):
+              causal: bool = True, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
     return flash_attention(
         q, k, v, block_q=block_q, block_kv=block_kv, causal=causal,
         interpret=interpret,
     )
 
 
+def _traffic(bp: Mapping[str, Any], point: Mapping[str, Any]):
+    """(flops, bytes) of one call per (batch, head) — ranking only."""
+    s, hd = bp["seq"], bp["hd"]
+    flops = 4.0 * s * s * hd           # QK^T + PV, 2 flops per MAC
+    bytes_ = 4.0 * s * hd * 4          # q, k, v, o at f32
+    return flops, bytes_
+
+
+FLASH_POLICY = TilePolicy(
+    kernel="flash_attention",
+    # both block dims feed the MXU in the scores dot, so they ladder from
+    # the MXU/lane edge; padding is allowed — the kernel masks tail keys
+    dims=lambda bp: (
+        TileDim("block_q", bp["seq"], semantic="lane", allow_padding=True),
+        TileDim("block_kv", bp["seq"], semantic="lane", allow_padding=True),
+    ),
+    vmem_model=lambda bp, p: vmem_bytes(p["block_q"], p["block_kv"], bp["hd"]),
+    traffic_model=_traffic,
+)
+
+
 def flash_region(
-    seq_len: int, head_dim: int, vmem_budget: int = 16 * 2**20
+    seq_len: int, head_dim: int, vmem_budget: Optional[int] = None,
+    arch: Optional[ArchSpec] = None,
+    pinned: Sequence[Mapping[str, Any]] = (),
 ) -> ATRegion:
-    blocks = tuple(
-        b for b in (128, 256, 512, 1024, 2048) if b <= seq_len and seq_len % b == 0
-    ) or (seq_len,)
-    space = ParamSpace(
-        [PerfParam("block_q", blocks), PerfParam("block_kv", blocks)],
-        constraint=lambda p: vmem_bytes(p["block_q"], p["block_kv"], head_dim)
-        <= vmem_budget,
+    arch = arch or local_arch()
+    emitted = FLASH_POLICY.emit(
+        arch, {"seq": seq_len, "hd": head_dim},
+        pinned=pinned, vmem_budget=vmem_budget,
     )
 
     def instantiate(point: Mapping[str, Any]):
         bq, bkv = point["block_q"], point["block_kv"]
         return lambda q, k, v: attention(q, k, v, block_q=bq, block_kv=bkv)
 
-    return ATRegion("flash_attention_pallas", space, instantiate, oracle=attention_ref)
+    return ATRegion(
+        "flash_attention_pallas", emitted.space, instantiate,
+        oracle=attention_ref, space_signature=emitted.signature,
+        hints=emitted.hints, arch=arch,
+    )
 
 
 def shape_class(q, k, v) -> BasicParams:
@@ -61,8 +88,8 @@ register_kernel(
         make_region=lambda bp: flash_region(bp["seq"], bp["hd"]),
         shape_class=shape_class,
         # staged pipeline stage 1: compile-only roofline ranking of the
-        # block-shape space; only top-k survivors pay a measured run
-        prescreen_factory=roofline_prescreen,
+        # emitted block-shape space, re-ranked with the emit-layer hints
+        prescreen_factory=hint_prescreen,
         tags=("pallas",),
     ),
     replace=True,

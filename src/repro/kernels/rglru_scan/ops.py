@@ -2,42 +2,65 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Mapping
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 
-from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
-from repro.core.cost import roofline_prescreen
+from repro.core import ATRegion, BasicParams, KernelSpec, register_kernel
+from repro.core.arch import ArchSpec, default_interpret, local_arch
+from repro.core.emit import TileDim, TilePolicy, hint_prescreen
 
 from .ref import rglru_scan_ref
 from .rglru_scan import rglru_scan, vmem_bytes
 
 
 @functools.partial(jax.jit, static_argnames=("block_w", "chunk", "interpret"))
-def scan(x, r, i, lam, block_w: int = 512, chunk: int = 128, interpret: bool = True):
+def scan(x, r, i, lam, block_w: int = 512, chunk: int = 128,
+         interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
     return rglru_scan(x, r, i, lam, block_w=block_w, chunk=chunk,
                       interpret=interpret)
 
 
+def _traffic(bp: Mapping[str, Any], point: Mapping[str, Any]):
+    s, w = bp["seq"], bp["width"]
+    flops = 8.0 * s * w
+    bytes_ = 4.0 * s * w * 4           # x, r, i, out at f32
+    return flops, bytes_
+
+
+RGLRU_POLICY = TilePolicy(
+    kernel="rglru_scan",
+    dims=lambda bp: (
+        TileDim("block_w", bp["width"], semantic="lane"),
+        TileDim("chunk", bp["seq"], semantic="sequential"),
+    ),
+    vmem_model=lambda bp, p: vmem_bytes(p["block_w"], p["chunk"]),
+    traffic_model=_traffic,
+)
+
+
 def rglru_region(
-    width: int, seq_len: int, vmem_budget: int = 16 * 2**20
+    width: int, seq_len: int, vmem_budget: Optional[int] = None,
+    arch: Optional[ArchSpec] = None,
+    pinned: Sequence[Mapping[str, Any]] = (),
 ) -> ATRegion:
-    w_blocks = tuple(
-        b for b in (128, 256, 512, 1024, 2560) if b <= width and width % b == 0
-    ) or (width,)
-    chunks = tuple(
-        c for c in (32, 64, 128, 256, 512) if c <= seq_len and seq_len % c == 0
-    ) or (seq_len,)
-    space = ParamSpace(
-        [PerfParam("block_w", w_blocks), PerfParam("chunk", chunks)],
-        constraint=lambda p: vmem_bytes(p["block_w"], p["chunk"]) <= vmem_budget,
+    arch = arch or local_arch()
+    emitted = RGLRU_POLICY.emit(
+        arch, {"width": width, "seq": seq_len},
+        pinned=pinned, vmem_budget=vmem_budget,
     )
 
     def instantiate(point: Mapping[str, Any]):
         bw, ck = point["block_w"], point["chunk"]
         return lambda x, r, i, lam: scan(x, r, i, lam, block_w=bw, chunk=ck)
 
-    return ATRegion("rglru_scan_pallas", space, instantiate, oracle=rglru_scan_ref)
+    return ATRegion(
+        "rglru_scan_pallas", emitted.space, instantiate,
+        oracle=rglru_scan_ref, space_signature=emitted.signature,
+        hints=emitted.hints, arch=arch,
+    )
 
 
 def shape_class(x, r, i, lam) -> BasicParams:
@@ -56,7 +79,7 @@ register_kernel(
         "rglru_scan",
         make_region=lambda bp: rglru_region(bp["width"], bp["seq"]),
         shape_class=shape_class,
-        prescreen_factory=roofline_prescreen,
+        prescreen_factory=hint_prescreen,
         tags=("pallas",),
     ),
     replace=True,

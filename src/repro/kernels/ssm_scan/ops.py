@@ -2,12 +2,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Mapping
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 
-from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
-from repro.core.cost import roofline_prescreen
+from repro.core import ATRegion, BasicParams, KernelSpec, register_kernel
+from repro.core.arch import ArchSpec, default_interpret, local_arch
+from repro.core.emit import TileDim, TilePolicy, hint_prescreen
 
 from .ref import ssm_scan_ref
 from .ssm_scan import ssm_scan, vmem_bytes
@@ -15,24 +16,40 @@ from .ssm_scan import ssm_scan, vmem_bytes
 
 @functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
 def scan(x, dt, A, Bc, Cc, D, block_d: int = 512, chunk: int = 128,
-         interpret: bool = True):
+         interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
     return ssm_scan(x, dt, A, Bc, Cc, D, block_d=block_d, chunk=chunk,
                     interpret=interpret)
 
 
+def _traffic(bp: Mapping[str, Any], point: Mapping[str, Any]):
+    s, d, n = bp["seq"], bp["d_inner"], bp["n_state"]
+    flops = 12.0 * s * d * n
+    bytes_ = (3.0 * s * d + d * n + 2.0 * s * n) * 4
+    return flops, bytes_
+
+
+SSM_POLICY = TilePolicy(
+    kernel="ssm_scan",
+    dims=lambda bp: (
+        TileDim("block_d", bp["d_inner"], semantic="lane"),
+        TileDim("chunk", bp["seq"], semantic="sequential"),
+    ),
+    vmem_model=lambda bp, p: vmem_bytes(p["block_d"], p["chunk"], bp["n_state"]),
+    traffic_model=_traffic,
+)
+
+
 def ssm_region(
-    d_inner: int, seq_len: int, n_state: int, vmem_budget: int = 16 * 2**20
+    d_inner: int, seq_len: int, n_state: int,
+    vmem_budget: Optional[int] = None, arch: Optional[ArchSpec] = None,
+    pinned: Sequence[Mapping[str, Any]] = (),
 ) -> ATRegion:
-    d_blocks = tuple(
-        b for b in (128, 256, 512, 1024, 2048) if b <= d_inner and d_inner % b == 0
-    ) or (d_inner,)
-    chunks = tuple(
-        c for c in (32, 64, 128, 256, 512) if c <= seq_len and seq_len % c == 0
-    ) or (seq_len,)
-    space = ParamSpace(
-        [PerfParam("block_d", d_blocks), PerfParam("chunk", chunks)],
-        constraint=lambda p: vmem_bytes(p["block_d"], p["chunk"], n_state)
-        <= vmem_budget,
+    arch = arch or local_arch()
+    emitted = SSM_POLICY.emit(
+        arch, {"d_inner": d_inner, "seq": seq_len, "n_state": n_state},
+        pinned=pinned, vmem_budget=vmem_budget,
     )
 
     def instantiate(point: Mapping[str, Any]):
@@ -40,7 +57,10 @@ def ssm_region(
         return lambda x, dt, A, Bc, Cc, D: scan(x, dt, A, Bc, Cc, D,
                                                 block_d=bd, chunk=ck)
 
-    return ATRegion("ssm_scan_pallas", space, instantiate, oracle=ssm_scan_ref)
+    return ATRegion(
+        "ssm_scan_pallas", emitted.space, instantiate, oracle=ssm_scan_ref,
+        space_signature=emitted.signature, hints=emitted.hints, arch=arch,
+    )
 
 
 def shape_class(x, dt, A, Bc, Cc, D) -> BasicParams:
@@ -60,7 +80,7 @@ register_kernel(
         "ssm_scan",
         make_region=lambda bp: ssm_region(bp["d_inner"], bp["seq"], bp["n_state"]),
         shape_class=shape_class,
-        prescreen_factory=roofline_prescreen,
+        prescreen_factory=hint_prescreen,
         tags=("pallas",),
     ),
     replace=True,

@@ -2,36 +2,65 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Mapping
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 
-from repro.core import ATRegion, BasicParams, KernelSpec, ParamSpace, PerfParam, register_kernel
-from repro.core.cost import roofline_prescreen
+from repro.core import ATRegion, BasicParams, KernelSpec, register_kernel
+from repro.core.arch import ArchSpec, default_interpret, local_arch
+from repro.core.emit import TileDim, TilePolicy, hint_prescreen
 
 from .ref import stress_ref
 from .stress import stress_pallas, vmem_bytes
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "block_j", "interpret"))
-def stress(inp, block_k: int = 8, block_j: int = 64, interpret: bool = True):
+def stress(inp, block_k: int = 8, block_j: int = 64,
+           interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
     return stress_pallas(inp, block_k=block_k, block_j=block_j, interpret=interpret)
 
 
-def stress_region(dims=(64, 64, 64), vmem_budget: int = 16 * 2**20) -> ATRegion:
+def _traffic(bp: Mapping[str, Any], point: Mapping[str, Any]):
+    nk, nj, ni = bp["nk"], bp["nj"], bp["ni"]
+    cells = float(nk * nj * ni)
+    return 30.0 * cells, 2.0 * cells * 4 * 9   # 9 stress/strain fields
+
+
+STRESS_POLICY = TilePolicy(
+    kernel="stress",
+    # both block dims are pure grid splits of the outer loops (the paper's
+    # Seism3D update_stress nest); the inner ni stays whole per program
+    dims=lambda bp: (
+        TileDim("block_k", bp["nk"], semantic="grid"),
+        TileDim("block_j", bp["nj"], semantic="grid"),
+    ),
+    vmem_model=lambda bp, p: vmem_bytes(p["block_k"], p["block_j"], bp["ni"]),
+    traffic_model=_traffic,
+)
+
+
+def stress_region(
+    dims=(64, 64, 64), vmem_budget: Optional[int] = None,
+    arch: Optional[ArchSpec] = None,
+    pinned: Sequence[Mapping[str, Any]] = (),
+) -> ATRegion:
     nk, nj, ni = dims
-    divs = lambda n: tuple(d for d in (1, 2, 4, 8, 16, 32, 64) if n % d == 0 and d <= n)
-    space = ParamSpace(
-        [PerfParam("block_k", divs(nk)), PerfParam("block_j", divs(nj))],
-        constraint=lambda p: vmem_bytes(p["block_k"], p["block_j"], ni)
-        <= vmem_budget,
+    arch = arch or local_arch()
+    emitted = STRESS_POLICY.emit(
+        arch, {"nk": nk, "nj": nj, "ni": ni},
+        pinned=pinned, vmem_budget=vmem_budget,
     )
 
     def instantiate(point: Mapping[str, Any]):
         bk, bj = point["block_k"], point["block_j"]
         return lambda inp: stress(inp, block_k=bk, block_j=bj)
 
-    return ATRegion("stress_pallas", space, instantiate, oracle=stress_ref)
+    return ATRegion(
+        "stress_pallas", emitted.space, instantiate, oracle=stress_ref,
+        space_signature=emitted.signature, hints=emitted.hints, arch=arch,
+    )
 
 
 def shape_class(inp) -> BasicParams:
@@ -51,7 +80,7 @@ register_kernel(
         "stress",
         make_region=lambda bp: stress_region(dims=(bp["nk"], bp["nj"], bp["ni"])),
         shape_class=shape_class,
-        prescreen_factory=roofline_prescreen,
+        prescreen_factory=hint_prescreen,
         tags=("pallas",),
     ),
     replace=True,

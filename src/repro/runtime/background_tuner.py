@@ -334,9 +334,14 @@ class BackgroundTuner:
         job.op.db.merge({resp["fingerprint"]: resp["entry"]})
         if resp["found"] != "final":
             return False  # nearest: the merged entry seeds the warm start
-        tuned = job.op.db.tuned_point(state.bp)
+        tuned = job.op.db.tuned_point(
+            state.bp,
+            space_signature=getattr(state.region, "space_signature", None),
+        )
         if tuned is None:
-            return False  # raced a local demotion: search normally
+            # raced a local demotion, or the service final was searched
+            # under a different emitted space: search normally
+            return False
         # mirror _build_state's cache-hit path: select, mark, re-rank
         state.region.select(tuned)
         state.from_cache = True

@@ -40,6 +40,11 @@ class ConformanceCase:
     oracle: Callable[..., Any]                 # ref.py ground truth
     dtypes: Tuple[str, ...] = ("float32",)
     tol: Dict[str, Tuple[float, float]] = field(default_factory=lambda: dict(DEFAULT_TOL))
+    kernel: str = ""                           # registry name (default: name)
+
+    @property
+    def kernel_name(self) -> str:
+        return self.kernel or self.name
 
     def cast_args(self, args: tuple, dtype: str) -> tuple:
         target = jnp.dtype(dtype)
@@ -77,6 +82,16 @@ def _flash_args(key: jax.Array) -> tuple:
     return q, k, v
 
 
+def _flash_args_padded(key: jax.Array) -> tuple:
+    # 200 is not a multiple of any pow2 block: every emitted candidate
+    # except the full-extent one tiles past the edge and masks the tail
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 200, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 200, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 200, 1, 16), jnp.float32)
+    return q, k, v
+
+
 CASES: Dict[str, ConformanceCase] = {
     case.name: case
     for case in (
@@ -98,6 +113,13 @@ CASES: Dict[str, ConformanceCase] = {
             make_args=_flash_args,
             oracle=lambda q, k, v: fa_ref.attention_ref(q, k, v, causal=True),
             dtypes=("float32", "bfloat16"),
+        ),
+        ConformanceCase(
+            name="flash_attention_padded",
+            kernel="flash_attention",
+            region_factory=lambda: fa_ops.flash_region(seq_len=200, head_dim=16),
+            make_args=_flash_args_padded,
+            oracle=lambda q, k, v: fa_ref.attention_ref(q, k, v, causal=True),
         ),
         ConformanceCase(
             name="ssm_scan",
