@@ -1,0 +1,157 @@
+"""Observability overhead benchmark: the disabled-tracing tax.
+
+The tracing layer (docs/observability.md) promises to be zero-cost when
+disabled: every instrumented seam guards with ``current_tracer() is
+None`` and the dispatch fast path carries no tracer code at all.  This
+bench measures that promise on the most instrumentation-dense workload —
+a full tune, whose loop hits the ``tuner.tune`` + per-trial
+``tuner.trial`` seams:
+
+* ``off`` — wall time of a toy tune with no tracer installed (what every
+  production run that doesn't pass ``--trace-out`` pays);
+* ``on``  — the same tune with a live ring-buffer tracer (what a traced
+  run pays; bounded, but allowed to cost more);
+* ``guard`` — the per-call cost of the ``current_tracer()`` guard itself,
+  measured directly.
+
+The **off** gate is the contract: the disabled-path overhead — the guard
+cost times the number of guard sites the workload actually crossed
+(bounded above by the events the enabled run emitted) — must stay under
+``MAX_OFF_PCT`` percent of the untraced wall time.  The enabled-path
+ratio is gated loosely (``benchmarks/baselines/obs_overhead.json``) as a
+canary against the tracer itself getting expensive.
+
+Two more rows complete the picture: finalized *dispatch* latency with
+tracing off vs. on (the fast path carries no tracer code, so the ratio
+must stay ~1 — gated as ``max_dispatch_ratio``), and the cost of a full
+Perfetto export of the traced run's ring buffer (informational).
+"""
+from __future__ import annotations
+
+import time
+
+from .common import FAST, emit
+
+TRIALS = 32 if FAST else 64
+REPS = 3 if FAST else 5
+GUARD_CALLS = 200_000
+MAX_OFF_PCT = 2.0
+
+
+def _toy_op(db, points: int):
+    from repro.core import (
+        ATRegion, AutotunedOp, BasicParams, KernelSpec, ParamSpace, PerfParam,
+    )
+
+    space = ParamSpace([PerfParam("i", tuple(range(points)))])
+    spec = KernelSpec(
+        "bench_obs_toy",
+        make_region=lambda bp: ATRegion(
+            "bench_obs_toy", space, lambda p: (lambda x: x)
+        ),
+        shape_class=lambda x: BasicParams.make(kernel="bench_obs_toy"),
+        cost_factory=lambda r, b, a, k: (lambda p: float(p["i"]) + 1.0),
+    )
+    return AutotunedOp(spec, db=db, warm=False, monitor=False)
+
+
+def _tune_once(tracer) -> float:
+    """One full tune (TRIALS measured candidates) under ``tracer``."""
+    from repro.core import TuningDB
+    from repro.obs import use_tracer
+
+    op = _toy_op(TuningDB(), TRIALS)
+    with use_tracer(tracer):
+        t0 = time.perf_counter()
+        op(_PROBE)
+        return time.perf_counter() - t0
+
+
+class _Probe:
+    shape = (8, 8)
+    dtype = "float32"
+
+
+_PROBE = _Probe()
+
+
+def _dispatch_per_call(tracer) -> float:
+    """Finalized fast-path dispatch latency under ``tracer`` (the fast
+    path has no tracer code, so off and on must cost the same)."""
+    from repro.core import TuningDB
+    from repro.obs import use_tracer
+
+    op = _toy_op(TuningDB(), 4)
+    op(_PROBE)  # tune + finalize: installs the fast route
+    calls = 2000
+    best = float("inf")
+    with use_tracer(tracer):
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            for _ in range(calls):
+                op.dispatch(_PROBE)
+            best = min(best, (time.perf_counter() - t0) / calls)
+    return best
+
+
+def run() -> None:
+    from repro.obs import Tracer, current_tracer
+
+    # warm once (imports, first-touch caches) before measuring either side
+    _tune_once(None)
+
+    off_s = min(_tune_once(None) for _ in range(REPS))
+
+    on_s, events = float("inf"), 0
+    last_tracer = None
+    for _ in range(REPS):
+        tracer = Tracer(capacity=1 << 16)
+        on_s = min(on_s, _tune_once(tracer))
+        events = max(events, tracer.emitted)  # guard sites per single run
+        last_tracer = tracer
+
+    t0 = time.perf_counter()
+    export = last_tracer.to_json()
+    export_s = time.perf_counter() - t0
+    assert export
+
+    dispatch_off_s = _dispatch_per_call(None)
+    dispatch_on_s = _dispatch_per_call(Tracer())
+    dispatch_ratio = (
+        dispatch_on_s / dispatch_off_s if dispatch_off_s else 1.0
+    )
+
+    t0 = time.perf_counter()
+    for _ in range(GUARD_CALLS):
+        current_tracer()
+    guard_s = (time.perf_counter() - t0) / GUARD_CALLS
+
+    # events emitted by the enabled run bound the guard sites the disabled
+    # run crossed (each emission sits behind exactly one guard)
+    off_overhead_pct = 100.0 * (events * guard_s) / off_s if off_s else 0.0
+    on_ratio = on_s / off_s if off_s else 1.0
+
+    emit("obs_overhead/off", off_s, f"trials={TRIALS}")
+    emit("obs_overhead/on", on_s, f"events={events}")
+    emit("obs_overhead/export", export_s, f"events={events}")
+    emit("obs_overhead/dispatch_off", dispatch_off_s, "fast-path no tracer")
+    emit("obs_overhead/dispatch_on", dispatch_on_s, "fast-path live tracer")
+    emit(
+        "obs_overhead/summary", off_s,
+        f"off_pct={off_overhead_pct:.3f};on_ratio={on_ratio:.2f}"
+        f";dispatch_ratio={dispatch_ratio:.2f}"
+        f";events={events};guard_ns={guard_s * 1e9:.1f}"
+        f";max_off_pct={MAX_OFF_PCT}",
+    )
+    if off_overhead_pct > MAX_OFF_PCT:
+        raise RuntimeError(
+            "disabled-tracing overhead missed its gate: "
+            f"{off_overhead_pct:.2f}% > {MAX_OFF_PCT}% of the untraced tune "
+            f"(guard={guard_s * 1e9:.0f}ns x {events} sites, off={off_s * 1e3:.2f}ms)"
+        )
+    if events <= 0:
+        raise RuntimeError("traced tune emitted no events — seams lost")
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,7 @@ def main() -> None:
         bench_fig13_14_combined,
         bench_fleet_service,
         bench_fleet_tune,
+        bench_obs_overhead,
         bench_roofline,
         bench_serve_overload,
         bench_serve_stream,
@@ -51,6 +52,7 @@ def main() -> None:
         bench_fleet_service,
         bench_train_step,
         bench_dispatch,
+        bench_obs_overhead,
     ):
         try:
             mod.run()

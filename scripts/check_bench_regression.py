@@ -430,6 +430,46 @@ def check_emit_space(record: dict, problems: list) -> str:
             f"hand points across {kernels} kernels, all gates held")
 
 
+def check_obs_overhead(record: dict, problems: list) -> str:
+    with open(BASELINES / "obs_overhead.json") as f:
+        baseline = json.load(f)
+    fields = _derived_fields(record, "obs_overhead/summary")
+    if fields is None:
+        problems.append("obs_overhead: no obs_overhead/summary row in record")
+        return "obs_overhead: missing"
+    off_pct = float(fields.get("off_pct", 100.0))
+    ceiling = float(baseline.get("max_off_pct", 2.0))
+    if off_pct > ceiling:
+        problems.append(
+            f"obs_overhead: disabled-tracing overhead {off_pct:.2f}% above "
+            f"the {ceiling}% gate — the guards leaked onto a hot loop"
+        )
+    on_ratio = float(fields.get("on_ratio", 0.0))
+    max_on = float(baseline.get("max_on_ratio", 5.0))
+    if on_ratio > max_on:
+        problems.append(
+            f"obs_overhead: enabled-tracing ratio {on_ratio:.2f}x above the "
+            f"{max_on}x canary — the tracer itself got expensive"
+        )
+    dispatch_ratio = float(fields.get("dispatch_ratio", 0.0))
+    max_dispatch = float(baseline.get("max_dispatch_ratio", 1.5))
+    if dispatch_ratio > max_dispatch:
+        problems.append(
+            f"obs_overhead: fast-path dispatch slowed {dispatch_ratio:.2f}x "
+            f"under a live tracer (gate {max_dispatch}x) — tracer code "
+            "leaked onto the dispatch fast path"
+        )
+    events = int(fields.get("events", 0))
+    floor = int(baseline.get("min_events", 1))
+    if events < floor:
+        problems.append(
+            f"obs_overhead: traced tune emitted only {events} events "
+            f"(need >= {floor}) — the tuner seams went quiet"
+        )
+    return (f"obs_overhead: off {off_pct:.2f}% / on {on_ratio:.2f}x / "
+            f"dispatch {dispatch_ratio:.2f}x over {events} events")
+
+
 def main() -> int:
     bench_path = Path(
         sys.argv[1] if len(sys.argv) > 1
@@ -454,6 +494,7 @@ def main() -> int:
         check_fleet_tune(record, problems),
         check_fleet_service(record, problems),
         check_emit_space(record, problems),
+        check_obs_overhead(record, problems),
     ]
 
     for p in problems:

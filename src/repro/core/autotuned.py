@@ -35,9 +35,10 @@ from typing import Any, Callable, Dict, List, Mapping, Optional
 
 import jax
 
+from ..obs.trace import current_tracer
 from .cost import AdaptiveWallClockCost, roofline_prescreen
 from .db import TuningDB
-from .params import BasicParams, project_point
+from .params import BasicParams, pp_key, project_point
 from .region import ATRegion
 from .registry import KernelSpec
 from .search import CoordinateDescent, Search, StagedSearch, default_prescreen_k
@@ -374,7 +375,20 @@ class AutotunedOp:
                 state = self._states.get(fp)
             if state is not None:
                 return state
-            state = self._build_state(bp, args, kwargs, tune)
+            # tracer guard lives HERE, on the slow path only: the fast
+            # dispatch route in __call__/_fast_lookup carries zero tracer
+            # code (the bench_dispatch >=10x and obs_overhead <=2% gates)
+            tr = current_tracer()
+            if tr is None:
+                state = self._build_state(bp, args, kwargs, tune)
+            else:
+                with tr.span(
+                    "dispatch.resolve", cat="dispatch", op=self.spec.name,
+                    fingerprint=fp,
+                ) as attrs:
+                    state = self._build_state(bp, args, kwargs, tune)
+                    attrs["from_cache"] = state.from_cache
+                    attrs["tuned"] = state.tuned
             state.traffic = traffic
             with self._state_lock:
                 self._states[fp] = state
@@ -527,6 +541,7 @@ class AutotunedOp:
                                 search=search, fresh=fresh, finalize=finalize)
             state.prescreen_evaluations += result.prescreen_evaluations
             winner = dict(result.best.point)
+            self._record_search_event(state, result, winner)
         except TrialBudgetExhausted:
             # Budget hit mid-search: select the argmin over what we measured,
             # but do NOT record a DB best — only a completed search is final,
@@ -546,6 +561,31 @@ class AutotunedOp:
         state.tune_thread = threading.get_ident()
         return winner
 
+    def _record_search_event(
+        self, state: OpState, result: Any, winner: Mapping[str, Any]
+    ) -> None:
+        """Persist the decision audit of a completed search: the measured
+        winner, how many candidates each stage touched, and the prescreen
+        ranking that chose the finalists — what ``launch/observe.py
+        explain`` later replays against the measured trial costs."""
+        payload: Dict[str, Any] = {
+            "winner": pp_key(winner),
+            "cost": float(result.best.cost),
+            "evaluations": result.evaluations,
+            "prescreen_evaluations": result.prescreen_evaluations,
+        }
+        if result.prescreen_costs:
+            ranked = sorted(
+                result.prescreen_costs.items(), key=lambda kv: (kv[1], kv[0])
+            )
+            payload["prescreen_rank"] = [k for k, _ in ranked[:8]]
+        sig = getattr(state.region, "space_signature", None)
+        if sig is not None:
+            payload["space_sig"] = str(sig)
+        if state.warm_seed is not None:
+            payload["warm_seed"] = pp_key(state.warm_seed)
+        self.db.record_event(state.bp, "search_completed", **payload)
+
     def _default_search(
         self, state: OpState, args: tuple, kwargs: dict
     ) -> Optional[Search]:
@@ -564,6 +604,14 @@ class AutotunedOp:
             near = self.db.nearest_tuned(state.bp)
             if near is not None:
                 seed = project_point(space, near["point"])
+                if seed is not None:
+                    # warm-start provenance: which sibling class seeded this
+                    # search and how far away it was (explainability trail)
+                    self.db.record_event(
+                        state.bp, "warm_start",
+                        source_fp=near.get("fingerprint"),
+                        distance=near["distance"], seed=dict(seed),
+                    )
         prescreen = None
         if self.staged is not False:
             if self.spec.prescreen_factory is not None:

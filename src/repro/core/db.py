@@ -59,7 +59,11 @@ RUNTIME_FLUSH_EVERY = 16
 
 # Tuning events (demotions, canary verdicts — docs/fleet.md) are the audit
 # trail, rare and precious: bounded higher-level, flushed on every record.
+# Overflow is never silent: the dropped oldest prefix is folded into one
+# ``events_truncated`` tombstone (count + oldest/newest timestamps) that
+# merge joins canonically (see _trim_events / _join_tombstones).
 EVENT_LIMIT = 256
+TOMBSTONE_KIND = "events_truncated"
 
 
 class _SchemaTooNew(ValueError):
@@ -242,7 +246,9 @@ class TuningDB:
                   "seq": self._event_seq, **payload}
             events.append(ev)
             if len(events) > EVENT_LIMIT:
-                del events[: len(events) - EVENT_LIMIT]
+                # never drop silently: the overflowed prefix folds into a
+                # single ``events_truncated`` tombstone (count + ts range)
+                entry["events"] = _trim_events(events, EVENT_LIMIT)
             self._flush()
             return dict(ev)
 
@@ -757,6 +763,56 @@ _LOG_FIELDS = (
 )
 
 
+def _is_tombstone(ev: Any) -> bool:
+    return isinstance(ev, dict) and ev.get("kind") == TOMBSTONE_KIND
+
+
+def _join_tombstones(tombs: list) -> Optional[Dict[str, Any]]:
+    """Lattice join of truncation tombstones: count takes the maximum (two
+    hosts that truncated divergent copies of a shared log overlap, so
+    summing would double-count), the covered timestamp range widens to
+    ``[min(oldest), max(newest)]``.  The ``(t=0.0, seq=0)`` stamp pins the
+    tombstone first under the event sort key (real events carry wall-clock
+    stamps), so a merged log always leads with its loss marker."""
+    if not tombs:
+        return None
+    tomb: Dict[str, Any] = {
+        "kind": TOMBSTONE_KIND, "t": 0.0, "seq": 0,
+        "count": max(int(t.get("count", 0)) for t in tombs),
+    }
+    oldest = [float(t["oldest_t"]) for t in tombs if "oldest_t" in t]
+    newest = [float(t["newest_t"]) for t in tombs if "newest_t" in t]
+    if oldest:
+        tomb["oldest_t"] = min(oldest)
+    if newest:
+        tomb["newest_t"] = max(newest)
+    return tomb
+
+
+def _trim_events(events: list, limit: int) -> list:
+    """Bound an event log to ``limit`` records without silent loss: the
+    dropped oldest prefix folds into a single ``events_truncated`` tombstone
+    carrying the drop count and the timestamp range it covered.  Existing
+    tombstones (from earlier trims, or several carried in by a merge) are
+    first joined into one; newly dropped events then *accumulate* onto it —
+    a sequential fold, which is exact for the single-writer append path.
+    """
+    tombs = [e for e in events if _is_tombstone(e)]
+    real = [e for e in events if not _is_tombstone(e)]
+    tomb = _join_tombstones(tombs)
+    keep = limit - 1 if (tomb is not None or len(real) > limit) else limit
+    if len(real) > keep:
+        drop = real[: len(real) - keep]
+        real = real[len(real) - keep:]
+        if tomb is None:
+            tomb = {"kind": TOMBSTONE_KIND, "t": 0.0, "seq": 0, "count": 0}
+        ts = [float(e.get("t", 0.0)) for e in drop]
+        tomb["count"] = int(tomb.get("count", 0)) + len(drop)
+        tomb["oldest_t"] = round(min([tomb.get("oldest_t", ts[0])] + ts), 6)
+        tomb["newest_t"] = round(max([tomb.get("newest_t", ts[0])] + ts), 6)
+    return ([tomb] if tomb is not None else []) + real
+
+
 def _union_log(
     ours: Dict[str, Any],
     theirs: Mapping[str, Any],
@@ -772,21 +828,36 @@ def _union_log(
     associative, and idempotent — then sorts deterministically.  Plain
     concat-dedup is neither: a record duplicated on one side would survive
     or collapse depending on merge direction.
+
+    Truncation tombstones in the events log are lifted out of the multiset
+    and joined on their own lattice (:func:`_join_tombstones`) — treating
+    them as ordinary records would let divergently truncated logs keep two
+    conflicting loss markers.
     """
     counts: Dict[str, int] = {}
+    tombs: list = []
     for log in (ours.get(field, []), theirs.get(field, [])):
         side: Dict[str, int] = {}
         for h in log:
+            if field == "events" and _is_tombstone(h):
+                tombs.append(h)
+                continue
             c = _canon(h)
             side[c] = side.get(c, 0) + 1
         for c, n in side.items():
             counts[c] = max(counts.get(c, 0), n)
-    if not counts:
+    if not counts and not tombs:
         return  # neither side has this log: don't materialize an empty one
     merged = [json.loads(c) for c, n in counts.items() for _ in range(n)]
     merged.sort(key=key)
+    tomb = _join_tombstones(tombs)
+    if tomb is not None:
+        merged.insert(0, tomb)
     if len(merged) > limit:
-        del merged[: len(merged) - limit]
+        merged = (
+            _trim_events(merged, limit) if field == "events"
+            else merged[len(merged) - limit:]
+        )
     ours[field] = merged
 
 

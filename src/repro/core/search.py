@@ -25,6 +25,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
+from ..obs.trace import current_tracer
 from .params import ParamSpace, pp_key, project_point
 
 
@@ -161,22 +162,44 @@ class SuccessiveHalving(Search):
         budget = self.initial_budget
         trials: List[Trial] = []
         evaluations = 0
+        rung = 0
         while True:
-            scored: List[Trial] = []
-            for p in alive:
-                c = float(cost(p, budget))
-                evaluations += 1
-                t = Trial(dict(p), c)
-                scored.append(t)
-                trials.append(t)
-                if self.on_trial:
-                    self.on_trial(t)
-            scored.sort(key=lambda t: t.cost)
+            tr = current_tracer()
+            if tr is None:
+                scored = self._rung(alive, budget, cost, trials)
+            else:
+                with tr.span(
+                    "search.rung", cat="search", rung=rung, budget=budget,
+                    alive=len(alive),
+                ) as attrs:
+                    scored = self._rung(alive, budget, cost, trials)
+                    attrs["best_cost"] = scored[0].cost
+            evaluations += len(alive)
             if len(scored) == 1:
                 return SearchResult(best=scored[0], trials=trials, evaluations=evaluations)
             keep = max(1, len(scored) // self.eta)
             alive = [t.point for t in scored[:keep]]
             budget *= self.eta
+            rung += 1
+
+    def _rung(
+        self,
+        alive: List[Dict[str, Any]],
+        budget: int,
+        cost,
+        trials: List[Trial],
+    ) -> List[Trial]:
+        """Measure one elimination rung; returns the rung's trials sorted
+        best-first (the caller keeps the top ``1/eta``)."""
+        scored: List[Trial] = []
+        for p in alive:
+            t = Trial(dict(p), float(cost(p, budget)))
+            scored.append(t)
+            trials.append(t)
+            if self.on_trial:
+                self.on_trial(t)
+        scored.sort(key=lambda t: t.cost)
+        return scored
 
 
 def default_prescreen_k(n_points: int) -> int:
@@ -247,7 +270,17 @@ class StagedSearch(Search):
         if not points:
             raise ValueError("no feasible points to search")
 
-        scores = self._score_all(points)
+        tr = current_tracer()
+        if tr is None:
+            scores = self._score_all(points)
+        else:
+            with tr.span(
+                "search.prescreen", cat="search", candidates=len(points),
+            ) as attrs:
+                scores = self._score_all(points)
+                finite = [s for s in scores.values() if math.isfinite(s)]
+                attrs["scored"] = len(finite)
+                attrs["excluded"] = len(points) - len(finite)
         k = self.k if self.k is not None else default_prescreen_k(len(points))
         ranked = sorted(points, key=lambda p: scores[pp_key(p)])
         survivors = ranked[: max(1, k)]
@@ -273,7 +306,16 @@ class StagedSearch(Search):
             measured = lambda p, budget: cost(p)  # noqa: E731
         else:
             measured = cost
-        result = finals.run(space.subset(survivors), measured)
+        tr = current_tracer()
+        if tr is None:
+            result = finals.run(space.subset(survivors), measured)
+        else:
+            with tr.span(
+                "search.finals", cat="search", survivors=len(survivors),
+                warm_seeded=seed is not None,
+            ) as attrs:
+                result = finals.run(space.subset(survivors), measured)
+                attrs["best_pp"] = pp_key(result.best.point)
         result.prescreen_evaluations = len(points)
         result.prescreen_costs = scores
         return result

@@ -20,6 +20,7 @@ from __future__ import annotations
 import math
 from typing import Any, Callable, Dict, Mapping, Optional
 
+from ..obs.trace import current_tracer
 from .db import TuningDB
 from .params import BasicParams, ParamSpace, pp_key
 from .region import ATRegion
@@ -64,7 +65,16 @@ class Tuner:
 
         supports_budget = bool(getattr(cost, "supports_budget", False))
 
-        def guarded(point: Mapping[str, Any], fn: Callable[[], float]) -> float:
+        def quarantine(point: Mapping[str, Any], reason: str) -> None:
+            tr = current_tracer()
+            if tr is not None:
+                tr.instant(
+                    "tuner.quarantine", cat="tuner", region=region.name,
+                    layer=layer, pp=pp_key(point), reason=reason,
+                )
+            self.db.record_quarantine(bp, point, reason, layer=layer)
+
+        def measured(point: Mapping[str, Any], fn: Callable[[], float]) -> float:
             """Measurement guardrail: a candidate whose cost raises or comes
             back non-finite (NaN/inf) is *quarantined* in the DB — it can
             never win this search (cost becomes +inf) nor any later one
@@ -77,17 +87,25 @@ class Tuner:
             except Exception as exc:
                 if getattr(exc, "tuning_control", False):
                     raise
-                self.db.record_quarantine(
-                    bp, point,
-                    f"cost raised {type(exc).__name__}: {exc}", layer=layer,
-                )
+                quarantine(point, f"cost raised {type(exc).__name__}: {exc}")
                 return math.inf
             if not math.isfinite(c):
-                self.db.record_quarantine(
-                    bp, point, f"non-finite cost {c!r}", layer=layer
-                )
+                quarantine(point, f"non-finite cost {c!r}")
                 return math.inf
             return c
+
+        def guarded(point: Mapping[str, Any], fn: Callable[[], float]) -> float:
+            tr = current_tracer()
+            if tr is None:
+                return measured(point, fn)
+            with tr.span(
+                "tuner.trial", cat="tuner", region=region.name, layer=layer,
+                pp=pp_key(point),
+            ) as attrs:
+                c = measured(point, fn)
+                attrs["cost"] = c
+                attrs["verdict"] = "ok" if math.isfinite(c) else "quarantined"
+                return c
 
         def caching_cost(
             point: Mapping[str, Any], budget: Optional[int] = None
@@ -114,7 +132,18 @@ class Tuner:
         # budgeted searches probe this to decide whether budgets pass through
         caching_cost.supports_budget = supports_budget
 
-        result = (search or self.search).run(region.space, caching_cost)
+        tr = current_tracer()
+        if tr is None:
+            result = (search or self.search).run(region.space, caching_cost)
+        else:
+            with tr.span(
+                "tuner.tune", cat="tuner", region=region.name, layer=layer,
+                fingerprint=bp.fingerprint(),
+            ) as attrs:
+                result = (search or self.search).run(region.space, caching_cost)
+                attrs["evaluations"] = result.evaluations
+                attrs["best_pp"] = pp_key(result.best.point)
+                attrs["best_cost"] = result.best.cost
         if not math.isfinite(result.best.cost):
             # every candidate raised or returned NaN/inf: there is no sane
             # winner to select or finalize — fail the search loudly (the

@@ -63,6 +63,18 @@ class WorkerReport:
     resumed: int = 0            # trials recovered from a synced scratch DB
     crashed: bool = False       # the worker process died mid-shard
 
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for the metrics registry
+        (:func:`repro.obs.metrics.snapshot_stats` protocol)."""
+        return {
+            "points": self.points,
+            "evaluations": self.evaluations,
+            "wall_s": self.wall_s,
+            "best_cost": self.best_cost,
+            "resumed": self.resumed,
+            "crashed": int(self.crashed),
+        }
+
 
 @dataclass
 class FleetResult:

@@ -52,6 +52,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.db import TuningDB
 from repro.core.params import BasicParams
+from repro.obs.trace import current_tracer
 
 from .transport import Transport, TransportError
 
@@ -98,6 +99,15 @@ class TuningService:
 
     def handle(self, op: str, payload: Dict[str, Any]) -> Dict[str, Any]:
         """One protocol operation — the single seam every transport calls."""
+        tr = current_tracer()
+        if tr is None:
+            return self._handle(op, payload)
+        with tr.span("service.handle", cat="fleet", op=op) as attrs:
+            resp = self._handle(op, payload)
+            attrs["ok"] = bool(resp.get("ok", True))
+            return resp
+
+    def _handle(self, op: str, payload: Dict[str, Any]) -> Dict[str, Any]:
         payload = payload or {}
         if op == "health":
             self.stats["health"] += 1
@@ -291,6 +301,21 @@ class ClientStats:
     syncs: int = 0
     retunes_received: int = 0
 
+    def as_metrics(self) -> Dict[str, int]:
+        """Flat numeric snapshot for the metrics registry
+        (:func:`repro.obs.metrics.snapshot_stats` protocol)."""
+        return {
+            "attempts": self.attempts,
+            "retries": self.retries,
+            "failures": self.failures,
+            "reconnects": self.reconnects,
+            "pushed_entries": self.pushed_entries,
+            "pulled_finals": self.pulled_finals,
+            "pulled_seeds": self.pulled_seeds,
+            "syncs": self.syncs,
+            "retunes_received": self.retunes_received,
+        }
+
 
 class ServiceClient:
     """A host's handle on the tuning service, with the failure policy built in.
@@ -343,6 +368,23 @@ class ServiceClient:
 
     def _call(self, op: str, payload: Dict[str, Any],
               retries: Optional[int] = None) -> Dict[str, Any]:
+        tr = current_tracer()
+        if tr is None:
+            return self._call_exec(op, payload, retries)
+        attempts_before = self.stats.attempts
+        with tr.span("service.call", cat="fleet", op=op) as attrs:
+            try:
+                resp = self._call_exec(op, payload, retries)
+            except ServiceUnavailable:
+                attrs["attempts"] = self.stats.attempts - attempts_before
+                attrs["outcome"] = "unavailable"
+                raise
+            attrs["attempts"] = self.stats.attempts - attempts_before
+            attrs["outcome"] = "ok"
+            return resp
+
+    def _call_exec(self, op: str, payload: Dict[str, Any],
+                   retries: Optional[int] = None) -> Dict[str, Any]:
         retries = self.retries if retries is None else retries
         last: Optional[BaseException] = None
         for attempt in range(retries + 1):
@@ -491,6 +533,16 @@ class AntiEntropySync:
     # -- one round -------------------------------------------------------------
 
     def sync_once(self) -> Dict[str, Any]:
+        tr = current_tracer()
+        if tr is None:
+            return self._sync_once()
+        with tr.span("fleet.sync", cat="fleet", round=self.rounds + 1) as attrs:
+            res = self._sync_once()
+            attrs["degraded"] = res["degraded"]
+            attrs["retunes"] = res["retunes"]
+            return res
+
+    def _sync_once(self) -> Dict[str, Any]:
         self.rounds += 1
         resp = self.client.try_sync(self.db)
         if resp is None:
@@ -552,15 +604,45 @@ class AntiEntropySync:
 # ---------------------------------------------------------------------------
 
 
-def serve_http(service: TuningService, host: str = "127.0.0.1", port: int = 0):
+def service_registry(service: TuningService) -> "Any":
+    """A MetricsRegistry pre-wired with the service's op counters and a
+    DB-summary collector (entries, finals, quarantines, truncation)."""
+    from repro.obs.metrics import MetricsRegistry
+
+    registry = MetricsRegistry()
+    registry.register_stats(
+        "tuning_service", service.stats,
+        help="tuning-service op counters",
+    )
+
+    def _collect(reg: Any) -> None:
+        from repro.obs.explain import db_summary
+
+        with service._lock:
+            summary = db_summary(service.db)
+        summary["retune_pending"] = len(service._retune)
+        for k, v in summary.items():
+            reg.gauge(f"tuning_db_{k}", help="tuning DB summary").set(v)
+
+    registry.register_collector(_collect)
+    return registry
+
+
+def serve_http(service: TuningService, host: str = "127.0.0.1", port: int = 0,
+               registry: Any = None):
     """Expose ``service`` on a ThreadingHTTPServer; returns the server.
 
     One route: ``POST /rpc`` with ``{"op": ..., "payload": ...}`` JSON,
-    mirroring :meth:`TuningService.handle`; ``GET /health`` for probes.
+    mirroring :meth:`TuningService.handle`; ``GET /health`` for probes and
+    ``GET /metrics`` for a Prometheus text exposition of the service's op
+    counters plus DB summary gauges (pass ``registry`` to expose a custom
+    :class:`~repro.obs.metrics.MetricsRegistry` instead).
     The server runs on a daemon thread — call ``server.shutdown()`` to
     stop.  ``port=0`` binds an ephemeral port (``server.server_address``).
     """
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    metrics = registry if registry is not None else service_registry(service)
 
     class Handler(BaseHTTPRequestHandler):
         def _reply(self, code: int, body: Dict[str, Any]) -> None:
@@ -571,9 +653,22 @@ def serve_http(service: TuningService, host: str = "127.0.0.1", port: int = 0):
             self.end_headers()
             self.wfile.write(data)
 
+        def _reply_text(self, code: int, text: str) -> None:
+            data = text.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
         def do_GET(self) -> None:  # noqa: N802 (stdlib naming)
             if self.path == "/health":
                 self._reply(200, service.handle("health", {}))
+            elif self.path == "/metrics":
+                try:
+                    self._reply_text(200, metrics.prometheus_text())
+                except Exception as e:  # exposition must not kill the service
+                    self._reply(500, {"error": f"{type(e).__name__}: {e}"})
             else:
                 self._reply(404, {"error": f"unknown path {self.path}"})
 

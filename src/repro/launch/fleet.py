@@ -50,7 +50,8 @@ def serve(args: argparse.Namespace) -> None:
     host, port = server.server_address[:2]
     print(f"tuning service listening on http://{host}:{port} "
           f"(db={args.db or '<memory>'}, "
-          f"{len(service.db.fingerprints())} entries)", flush=True)
+          f"{len(service.db.fingerprints())} entries; "
+          f"GET /metrics for Prometheus text)", flush=True)
     try:
         import threading
 
@@ -129,6 +130,9 @@ def main() -> None:
                     help="per-call duplicate-delivery probability")
     ap.add_argument("--fault-reorder", type=float, default=0.0,
                     help="per-call hold-and-replay (reorder) probability")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's worker/client/fault metrics as "
+                         "Prometheus text to PATH")
     args = ap.parse_args()
 
     if args.serve_db:
@@ -176,26 +180,36 @@ def main() -> None:
     if args.hosts > 1:
         print(f"host {args.host_index}/{args.hosts}: this process measured "
               f"its slice only; the service holds the union")
+
+    # worker/client/fault stats all flow through the one registry pipe
+    # (docs/observability.md) — the printed report and --metrics-out render
+    # the same source of truth
+    from repro.obs import MetricsRegistry
+
+    registry = MetricsRegistry()
     for w in fleet.workers:
-        flags = "".join(
-            [" crashed" if w.crashed else "",
-             f" resumed={w.resumed}" if w.resumed else ""]
+        registry.register_stats(
+            "fleet_worker", w, help="per-worker shard stats", worker=w.worker
         )
-        print(f"  worker {w.worker}: {w.points} points, "
-              f"{w.evaluations} evals, {w.wall_s * 1e3:.1f} ms, "
-              f"shard best {w.best_point} @ {w.best_cost:.3e}{flags}")
+    if client is not None:
+        registry.register_stats(
+            "service_client", client.stats, help="service-client stats"
+        )
+        registry.gauge(
+            "service_client_degraded", help="1 = merge barrier ran local-only"
+        ).set(0 if fleet.service_synced else 1)
+    if injector is not None:
+        registry.register_stats(
+            "fault_injector", injector.stats, help="injected transport faults"
+        )
+    print(registry.report(title="fleet metrics"))
     print(f"fleet winner: {json.dumps(fleet.best.point, sort_keys=True)} "
           f"@ {fleet.best.cost:.3e} ({fleet.evaluations} total evaluations)")
-
-    if client is not None:
-        state = "synced" if fleet.service_synced else "DEGRADED (local-only)"
-        print(f"service: {state}; client attempts={client.stats.attempts} "
-              f"retries={client.stats.retries} failures={client.stats.failures}")
-        if injector is not None:
-            s = injector.stats
-            print(f"faults injected: drops={s.dropped_requests}+"
-                  f"{s.dropped_responses} dups={s.duplicated} "
-                  f"reorders={s.reordered} (delivered {s.delivered})")
+    if client is not None and not fleet.service_synced:
+        print("WARNING: service DEGRADED — merge barrier ran local-only")
+    if args.metrics_out:
+        registry.write(args.metrics_out)
+        print(f"metrics written to {args.metrics_out}")
 
     if args.check_equivalence:
         single = FleetCoordinator(

@@ -98,6 +98,24 @@ def main() -> None:
         help="disable the engine's hardened paths (strict upfront "
              "validation, raise-on-stall) — the crash/deadlock baseline",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write a Chrome/Perfetto trace of the run (tuner trials, "
+             "background jobs, engine request timelines on the virtual "
+             "clock) to PATH; view at ui.perfetto.dev or validate with "
+             "`repro.launch.observe trace`",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write the run's metrics registry (engine/server, chaos, "
+             "background-tuner stats) as Prometheus text to PATH",
+    )
+    ap.add_argument(
+        "--tick-timer", type=float, default=None, metavar="SECONDS",
+        help="deterministic measurement clock (stream mode): every timed "
+             "step costs exactly this many virtual seconds, so a seeded "
+             "--chaos-seed run produces a byte-identical --trace-out",
+    )
     tune_mode = ap.add_mutually_exclusive_group()
     tune_mode.add_argument(
         "--background-tune", action="store_true",
@@ -152,7 +170,8 @@ def main() -> None:
         for flag, val in (("--deadline", args.deadline),
                           ("--queue-limit", args.queue_limit),
                           ("--shed-policy", args.shed_policy),
-                          ("--chaos-seed", args.chaos_seed)):
+                          ("--chaos-seed", args.chaos_seed),
+                          ("--tick-timer", args.tick_timer)):
             if val is not None:
                 ap.error(f"{flag} requires --stream (the static Server has "
                          "no admission queue to bound)")
@@ -167,9 +186,17 @@ def main() -> None:
     )
     from repro.fleet import DriftMonitor, FleetCoordinator
     from repro.models import init_params, param_specs
+    from repro.obs import MetricsRegistry, TickTimer, Tracer, set_tracer
     from repro.runtime import (
         BackgroundTuner, ChaosInjector, Server, StreamingEngine,
     )
+
+    tracer = Tracer() if args.trace_out else None
+    if tracer is not None:
+        # process-wide: tuner trials, search stages, background jobs, and
+        # fleet calls all land on the same flight recorder as the engine
+        set_tracer(tracer)
+    registry = MetricsRegistry() if args.metrics_out else None
 
     cfg = get_config(args.arch, smoke=not args.full)
     params = init_params(jax.random.PRNGKey(0), param_specs(cfg))
@@ -229,6 +256,8 @@ def main() -> None:
             shed_policy=args.shed_policy,
             default_ttl_s=args.deadline,
             chaos=chaos,
+            timer=TickTimer(args.tick_timer) if args.tick_timer else None,
+            tracer=tracer,
         )
         out = engine.serve(requests)
         s = engine.stats
@@ -238,35 +267,33 @@ def main() -> None:
             f"({s.prefill_steps} prefill / {s.decode_steps} decode steps, "
             f"peak in-flight {s.peak_in_flight})"
         )
-        if not args.unhardened:
-            counts = {st: 0 for st in ("ok", "timed_out", "shed", "error")}
-            for res in engine.results.values():
-                counts[res.status] += 1
-            print(
-                "retired: "
-                + ", ".join(f"{k} {v}" for k, v in counts.items())
-                + (f", duplicates {s.duplicates}" if s.duplicates else "")
+        # every stat object flows through the one registry pipe — the
+        # report below and --metrics-out render the same source of truth
+        registry = registry or MetricsRegistry()
+        registry.register_stats("engine", s, help="streaming-engine stats")
+        if chaos is not None:
+            registry.register_stats(
+                "chaos", chaos.stats, help="chaos-injector stats"
             )
-            if chaos is not None:
-                cs = chaos.stats
-                print(
-                    f"chaos: {cs.faults} faults injected "
-                    f"({cs.transient_faults} transient / "
-                    f"{cs.poison_faults} poison), "
-                    f"{cs.blocks_squeezed} KV squeezes, {cs.delays} delays; "
-                    f"engine absorbed {s.step_faults} step faults, "
-                    f"{s.preempted} preemptions"
+
+        def _retired(reg):
+            for status in ("ok", "timed_out", "shed", "error"):
+                n = sum(
+                    1 for r in engine.results.values() if r.status == status
                 )
+                reg.gauge(
+                    "engine_retired", help="terminal request statuses"
+                ).set(n, status=status)
+
+        registry.register_collector(_retired)
+        print(registry.report(title="stream metrics"))
+        if not args.unhardened:
             unique_rids = {r.rid for r in requests}
             if set(engine.results) != unique_rids:
                 missing = sorted(unique_rids - set(engine.results))
                 print(f"ERROR: drain incomplete — {len(missing)} requests "
                       f"never retired: {missing[:8]}")
                 sys.exit(1)
-        print(
-            f"ttft p50 {s.ttft_percentile(50) * 1e3:.1f} ms, "
-            f"p99 {s.ttft_percentile(99) * 1e3:.1f} ms"
-        )
         print(f"traffic classes: {', '.join(engine.traffic_classes_seen) or '-'}")
         print(f"hot-path tuning evaluations: {engine.hot_path_cost_evaluations}")
         if tuner is not None:
@@ -283,6 +310,14 @@ def main() -> None:
                 print("WARNING: background tuning did not drain within 300s")
             for label, err in tuner.errors:
                 print(f"WARNING: background tuning failed for {label}: {err!r}")
+        if args.metrics_out:
+            registry.write(args.metrics_out)
+            print(f"metrics written to {args.metrics_out}")
+        if tracer is not None:
+            set_tracer(None)
+            tracer.write(args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"({tracer.emitted} events, {tracer.dropped} dropped)")
         return
 
     drift = (
@@ -322,6 +357,18 @@ def main() -> None:
     if drift is not None and drift.transitions:
         kinds = ", ".join(kind for _, kind in drift.transitions)
         print(f"drift transitions: {kinds}")
+    if args.metrics_out:
+        registry = registry or MetricsRegistry()
+        registry.register_stats(
+            "server", server.stats, help="static-server stats"
+        )
+        registry.write(args.metrics_out)
+        print(f"metrics written to {args.metrics_out}")
+    if tracer is not None:
+        set_tracer(None)
+        tracer.write(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              f"({tracer.emitted} events, {tracer.dropped} dropped)")
 
 
 if __name__ == "__main__":

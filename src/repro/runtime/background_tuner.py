@@ -36,10 +36,12 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.autotuned import AutotunedOp, OpState
+from repro.obs.trace import current_tracer
 
 
 @dataclass
@@ -55,6 +57,8 @@ class TuneJob:
     # failure) goes to ``on_winner`` — the DriftMonitor's canary entry.
     retune: bool = False
     on_winner: Optional[Callable[[Optional[dict]], None]] = None
+    # enqueue stamp (time.perf_counter): the job span reports queue wait
+    submitted_s: float = 0.0
 
 
 class BackgroundTuner:
@@ -180,7 +184,8 @@ class BackgroundTuner:
                 return state
             self._inflight.add(fp)
         label = state.traffic.label if state.traffic else op.spec.name
-        self._put(TuneJob(op, state, args, kwargs, label, on_complete),
+        self._put(TuneJob(op, state, args, kwargs, label, on_complete,
+                          submitted_s=time.perf_counter()),
                   -priority)
         return state
 
@@ -212,6 +217,7 @@ class BackgroundTuner:
         self._put(TuneJob(
             op, state, args, dict(kwargs or {}), label,
             retune=True, on_winner=on_winner,
+            submitted_s=time.perf_counter(),
         ), 0)
         return True
 
@@ -274,41 +280,71 @@ class BackgroundTuner:
             _, _, job = self._queue.get()
             if job is None:
                 return
-            fp = job.state.bp.fingerprint()
-            try:
-                if job.retune:
-                    self._run_retune(job)
-                elif self._adopt_from_service(job):
-                    pass  # the service's final landed; no search needed
-                else:
-                    job.op.tune_state(
-                        job.state, job.args, job.kwargs,
-                        search=self._fleet_search(job),
-                    )
-                    self._push_to_service(job, fp)
-            except BaseException as e:  # a bad class must not kill the worker
-                self.errors.append((job.label, e))
-                with self._cv:  # never retried: submit() skips failed classes
-                    if not job.retune:
-                        self._failed[fp] = job.label
+            tr = current_tracer()
+            if tr is None:
+                self._handle(job)
+                continue
+            wait = (
+                time.perf_counter() - job.submitted_s
+                if job.submitted_s else 0.0
+            )
+            # the queue->tune->swap lifecycle span: queue wait rides as an
+            # attr, the tune itself nests the tuner.tune / search.* spans,
+            # and the hot swap is stamped by the outcome
+            with tr.span(
+                "bgtuner.job", cat="bgtuner", label=job.label,
+                retune=job.retune, queue_wait_s=round(max(0.0, wait), 6),
+            ) as attrs:
+                attrs["outcome"] = self._handle(job)
+
+    def _handle(self, job: TuneJob) -> str:
+        """Run one job through the queue->tune->swap lifecycle; returns the
+        outcome label (``tuned`` / ``adopted`` / ``retuned`` / ``failed``)."""
+        fp = job.state.bp.fingerprint()
+        outcome = "tuned"
+        try:
+            if job.retune:
+                self._run_retune(job)
+                outcome = "retuned"
+            elif self._adopt_from_service(job):
+                outcome = "adopted"  # the service's final landed; no search
             else:
+                job.op.tune_state(
+                    job.state, job.args, job.kwargs,
+                    search=self._fleet_search(job),
+                )
+                self._push_to_service(job, fp)
+        except BaseException as e:  # a bad class must not kill the worker
+            self.errors.append((job.label, e))
+            outcome = "failed"
+            with self._cv:  # never retried: submit() skips failed classes
                 if not job.retune:
-                    self.completed.append((job.label, job.state))
-                    if job.on_complete is not None:
-                        try:  # a callback bug is an error, not a failed tune
-                            job.on_complete(job.state)
-                        except BaseException as e:
-                            self.errors.append((job.label, e))
-            finally:
-                try:  # guardrail bookkeeping must not kill the worker either
-                    if job.op.db.quarantined(job.state.bp):
-                        with self._cv:
-                            self._quarantined[fp] = job.label
-                except BaseException:
-                    pass
-                with self._cv:
-                    self._inflight.discard(fp)
-                    self._cv.notify_all()
+                    self._failed[fp] = job.label
+        else:
+            if not job.retune:
+                tr = current_tracer()
+                if tr is not None:  # the winner is live from this point on
+                    tr.instant(
+                        "bgtuner.swap", cat="bgtuner", label=job.label,
+                        outcome=outcome,
+                    )
+                self.completed.append((job.label, job.state))
+                if job.on_complete is not None:
+                    try:  # a callback bug is an error, not a failed tune
+                        job.on_complete(job.state)
+                    except BaseException as e:
+                        self.errors.append((job.label, e))
+        finally:
+            try:  # guardrail bookkeeping must not kill the worker either
+                if job.op.db.quarantined(job.state.bp):
+                    with self._cv:
+                        self._quarantined[fp] = job.label
+            except BaseException:
+                pass
+            with self._cv:
+                self._inflight.discard(fp)
+                self._cv.notify_all()
+        return outcome
 
     def _fleet_search(self, job: TuneJob):
         """This job's search override: fleet-sharded when a coordinator is set."""
@@ -345,6 +381,12 @@ class BackgroundTuner:
         # mirror _build_state's cache-hit path: select, mark, re-rank
         state.region.select(tuned)
         state.from_cache = True
+        # fleet-adoption provenance for the explain report: this class is
+        # running a winner another host searched, not a local result
+        job.op.db.record_event(
+            state.bp, "adopted_from_service",
+            fingerprint=resp["fingerprint"], found=str(resp["found"]),
+        )
         from repro.core.tuner import RuntimeSelector
 
         state.selector = RuntimeSelector(

@@ -71,6 +71,21 @@ class ChaosStats:
     def faults(self) -> int:
         return self.transient_faults + self.poison_faults
 
+    def as_metrics(self) -> dict:
+        """Flat numeric snapshot for the metrics registry
+        (:func:`repro.obs.metrics.snapshot_stats` protocol)."""
+        return {
+            "steps_seen": self.steps_seen,
+            "transient_faults": self.transient_faults,
+            "poison_faults": self.poison_faults,
+            "faults": self.faults,
+            "blocks_squeezed": self.blocks_squeezed,
+            "blocks_released": self.blocks_released,
+            "delays": self.delays,
+            "delay_s": self.delay_s,
+            "ticks": self.ticks,
+        }
+
 
 class ChaosInjector:
     """Deterministic seeded fault injection around a StreamingEngine.

@@ -102,6 +102,7 @@ from repro.core import (
 )
 from repro.core.autotuned import OpState
 from repro.data.pipeline import ServingRequest
+from repro.obs.trace import current_tracer
 from repro.distributed.sharding import mesh_bp_entries
 from repro.models import cache_batch_axis, decode_fn, init_cache, prefill_fn
 from repro.models.config import ModelConfig
@@ -299,6 +300,33 @@ class StreamStats:
             return 0.0
         return float(np.percentile(np.asarray(list(self.ttft_s.values())), q))
 
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for the metrics registry
+        (:func:`repro.obs.metrics.snapshot_stats` protocol)."""
+        return {
+            "tokens_out": self.tokens_out,
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "decode_calls": self.decode_calls,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "idle_s": self.idle_s,
+            "makespan_s": self.makespan_s,
+            "peak_in_flight": self.peak_in_flight,
+            "requests_finished": len(self.finish_s),
+            "timeouts": self.timeouts,
+            "sheds": self.sheds,
+            "errors": self.errors,
+            "duplicates": self.duplicates,
+            "preempted": self.preempted,
+            "step_faults": self.step_faults,
+            "knob_faults": self.knob_faults,
+            "tok_per_s": self.tok_per_s,
+            "ttft_p50_s": self.ttft_percentile(50),
+            "ttft_p99_s": self.ttft_percentile(99),
+        }
+
 
 @dataclass
 class RequestResult:
@@ -392,6 +420,8 @@ class StreamingEngine:
         max_preemptions: int = 3,
         watchdog_limit: int = 200,
         chaos: Any = None,
+        timer: Any = None,
+        tracer: Any = None,
     ) -> None:
         if shed_policy is not None and shed_policy not in SHED_POLICIES:
             raise ValueError(
@@ -414,6 +444,12 @@ class StreamingEngine:
         self.max_preemptions = int(max_preemptions)
         self.watchdog_limit = int(watchdog_limit)
         self.chaos = chaos
+        # observability: ``timer`` is the *measurement* clock (step wall
+        # times feeding the virtual clock) — inject e.g. a TickTimer for
+        # byte-identical deterministic traces; ``tracer`` pins a Tracer to
+        # this engine (falls back to the process-wide current_tracer())
+        self._timer = timer if timer is not None else time.perf_counter
+        self.tracer = tracer
         self.cache = PagedKVCache(cfg, n_blocks, self.max_len)
         self.degree = DegreeController(max_degree=max(2, n_blocks))
         self.stats = StreamStats()
@@ -454,6 +490,10 @@ class StreamingEngine:
             "max_in_flight": self.cache.n_blocks,
             "shed_policy": self.shed_policy or "reject-new",
         }
+
+    def _tr(self):
+        """Active tracer for engine events (pinned beats process-global)."""
+        return self.tracer if self.tracer is not None else current_tracer()
 
     # -- registry ops --------------------------------------------------------
 
@@ -810,6 +850,14 @@ class StreamingEngine:
         self.results[rid] = RequestResult(
             rid=rid, status=status, tokens=list(tokens), detail=detail
         )
+        tr = self._tr()
+        if tr is not None:
+            # exactly one terminal instant per admitted rid, on the virtual
+            # clock (the retire-uniqueness property test keys on this)
+            tr.instant(
+                "engine.retire", t=now, cat="engine", track="engine",
+                rid=rid, status=status, tokens=len(tokens),
+            )
         self.cache.release(rid)
         if status == "ok":
             out[rid] = list(tokens)
@@ -858,6 +906,13 @@ class StreamingEngine:
                         f"{need} KV slots > capacity {self.max_len}"),
             )
             return
+        tr = self._tr()
+        if tr is not None:
+            tr.instant(
+                "engine.admit", t=now, cat="engine", track="engine",
+                rid=rid, plen=plen, max_new_tokens=mnt,
+                queue_wait_s=round(max(0.0, now - float(r.arrival_s)), 9),
+            )
         waiting.append(_Waiting(req=r, deadline=self._deadline_of(r)))
 
     def _expire_deadlines(
@@ -914,7 +969,8 @@ class StreamingEngine:
             )
 
     def _maybe_preempt(
-        self, waiting: List[_Waiting], active: Dict[int, _Active]
+        self, waiting: List[_Waiting], active: Dict[int, _Active],
+        now: float = 0.0,
     ) -> bool:
         """Evict the lowest-priority in-flight request when the pool is
         exhausted and a strictly higher-priority admission is blocked.  The
@@ -936,6 +992,13 @@ class StreamingEngine:
         if cand_pri <= int(victim.req.priority):
             return False
         rid = victim.req.rid
+        tr = self._tr()
+        if tr is not None:
+            tr.instant(
+                "engine.preempt", t=now, cat="engine", track="engine",
+                rid=rid, priority=int(victim.req.priority),
+                preemptions=victim.preemptions + 1,
+            )
         del active[rid]
         self.cache.release(rid)
         waiting.insert(0, _Waiting(
@@ -1048,7 +1111,7 @@ class StreamingEngine:
                 )
                 self._shed(waiting, out, now, policy)
             if self.hardened:
-                self._maybe_preempt(waiting, active)
+                self._maybe_preempt(waiting, active, now)
 
             progressed = False
             group = self._pick_group(waiting, active, knobs)
@@ -1081,6 +1144,13 @@ class StreamingEngine:
         if self.chaos is not None:
             self.chaos.drain(self.cache)
         self.stats.makespan_s += now - t_start
+        tr = self._tr()
+        if tr is not None:
+            tr.complete(
+                "engine.serve", t_start, now, cat="engine", track="engine",
+                requests=len(reqs), retired=len(self.results),
+                tokens_out=self.stats.tokens_out,
+            )
         return out
 
     # -- prefill -------------------------------------------------------------
@@ -1135,16 +1205,24 @@ class StreamingEngine:
         label = pstate.traffic.label if pstate.traffic else "prefill"
         if self.chaos is not None:
             self.chaos.before_step("prefill", [r.rid for r in reqs])
-        t0 = time.perf_counter()
+        t0 = self._timer()
         with self.degree.region(label):
             logits, cache = pstate.region(self.params, batch)
             logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = self._timer() - t0
         self.stats.prefill_s += dt
         self.stats.prefill_steps += 1
+        t_v0 = now
         now += dt
         if self.chaos is not None:
             now += self.chaos.step_delay()
+        tr = self._tr()
+        if tr is not None:
+            tr.complete(
+                "engine.prefill", t_v0, now, cat="engine", track="engine",
+                rids=[r.rid for r in reqs], batch=len(reqs), plen=plen,
+                label=label,
+            )
         if pstate.selector is not None and pstate.selector.observe(dt):
             self._on_tuned(pstate)
         toks = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
@@ -1256,19 +1334,26 @@ class StreamingEngine:
         label = dstate.traffic.label if dstate.traffic else "decode"
         if self.chaos is not None:
             self.chaos.before_step("decode", rids)
-        t0 = time.perf_counter()
+        t0 = self._timer()
         with self.degree.region(label):
             new_tok, pool = dstate.region(
                 self.params, self.cache.pool, idx_arr, tok_arr, len_hint
             )
             new_tok.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = self._timer() - t0
         self.cache.pool = pool
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
+        t_v0 = now
         now += dt
         if self.chaos is not None:
             now += self.chaos.step_delay()
+        tr = self._tr()
+        if tr is not None:
+            tr.complete(
+                "engine.decode", t_v0, now, cat="engine", track="engine",
+                rids=rids, batch=A, bucket=bucket, label=label,
+            )
         if dstate.selector is not None and dstate.selector.observe(dt):
             self._on_tuned(dstate)
         new_np = np.asarray(new_tok)[:A]
